@@ -1,0 +1,73 @@
+"""Fig 5 / Appendix F: AJIVE recovers the global second moment under
+structured drift where naive averaging is biased.
+
+V* = (G*)⊙² with rank-5 G*; clients observe G_k = G* + L_k (rank-2 drift) +
+noise and compute V_k = G_k⊙². We compare ‖V_est − V*‖_F for naive averaging,
+average+SVD, AJIVE rank-5, and AJIVE rank-15 (the r(r+1)/2 rank-expansion
+point) as the number of clients grows.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ajive import ajive_sync
+from .common import emit
+
+N, M, R = 48, 48, 5
+
+
+def make_problem(key, k_clients, drift=1.0, noise=0.1):
+    k1, k2, k3 = jax.random.split(key, 3)
+    g_star = (jax.random.normal(k1, (N, R)) @ jax.random.normal(k2, (R, M))
+              / jnp.sqrt(R))
+    v_star = g_star ** 2
+    views = []
+    for i in range(k_clients):
+        ki = jax.random.fold_in(k3, i)
+        a, b, c = jax.random.split(ki, 3)
+        drift_m = (jax.random.normal(a, (N, 2)) @ jax.random.normal(b, (2, M))
+                   * drift / jnp.sqrt(2))
+        g_k = g_star + drift_m + noise * jax.random.normal(c, (N, M))
+        views.append(g_k ** 2)
+    return jnp.stack(views), v_star
+
+
+def estimators(views):
+    k = views.shape[0]
+    naive = jnp.mean(views, axis=0)
+    u, s, vt = jnp.linalg.svd(naive, full_matrices=False)
+    avg_svd15 = (u[:, :15] * s[:15][None]) @ vt[:15]
+    out = {"naive": naive, "avg_svd_r15": avg_svd15}
+    if k >= 2:
+        out["ajive_r5"] = ajive_sync(views, rank=5)
+        out["ajive_r15"] = ajive_sync(views, rank=15)
+    return out
+
+
+def main(client_counts=(2, 4, 8, 16), seed=0):
+    rows = {}
+    t0 = time.perf_counter()
+    for k in client_counts:
+        views, v_star = make_problem(jax.random.PRNGKey(seed), k)
+        errs = {name: float(jnp.linalg.norm(est - v_star)
+                            / jnp.linalg.norm(v_star))
+                for name, est in estimators(views).items()}
+        rows[str(k)] = errs
+    dt = time.perf_counter() - t0
+    last = rows[str(client_counts[-1])]
+    emit("ajive_recovery", dt / len(client_counts) * 1e6,
+         (f"K={client_counts[-1]};naive={last['naive']:.3f};"
+          f"ajive_r15={last['ajive_r15']:.3f}"))
+    # Paper claims at the largest K: AJIVE r15 < post-hoc SVD < naive.
+    assert last["ajive_r15"] < last["naive"], rows
+    with open("bench_ajive_recovery.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

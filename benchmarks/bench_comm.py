@@ -1,0 +1,75 @@
+"""Table 2: per-round client↔server traffic + state memory per method.
+
+Analytic accounting for one adapted block W ∈ R^{n×n} at rank r, PLUS
+measured payload bytes from the reference engine's actual uplink structures.
+Validates the paper's claim: FedGaLore's extra uplink is exactly one n×r
+buffer per block (the projected ṽ) — same order as LoRA factors, far below
+dense n×n states.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import galore as gal
+from repro.core.fed import FedConfig, FedEngine, METHODS
+from .common import emit
+
+
+def analytic(n=1024, r=8, bytes_per=2):
+    lora_factors = 2 * n * r * bytes_per            # A and B
+    rows = {
+        "fedit": {"uplink": lora_factors, "opt_state": 2 * 2 * n * r * 2},
+        "ffa_lora": {"uplink": n * r * bytes_per, "opt_state": 0},
+        "flora": {"uplink": lora_factors, "opt_state": 2 * 2 * n * r * 2},
+        "fedavg_full": {"uplink": n * n * bytes_per,
+                        "opt_state": 2 * n * n * 4},
+        "fedgalore": {"uplink": n * r * bytes_per      # factorized update
+                      + n * r * 4                       # ṽ fp32
+                      + 4,                              # seed
+                      "opt_state": 2 * n * r * 4},
+    }
+    return rows
+
+
+def measured(seed=0):
+    """Run one FedGaLore round on a tiny model; measure the real ṽ payload."""
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, (64, 64)), "b": jnp.zeros(64)}
+
+    def loss(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    eng = FedEngine(FedConfig(method="fedgalore", rank=8, lr=1e-3,
+                              local_steps=2), loss, params)
+    x = jax.random.normal(key, (3, 2, 4, 64))
+    y = jnp.zeros((3, 2, 4, 64))
+    eng.run_round((x, y))
+    v_bytes = sum(l.size * l.dtype.itemsize
+                  for l in jax.tree_util.tree_leaves(eng.synced_v)
+                  if l is not None)
+    delta_bytes = sum(l.size * l.dtype.itemsize for l in
+                      jax.tree_util.tree_leaves(eng.global_trainable))
+    return {"v_payload_bytes": int(v_bytes),
+            "update_bytes": int(delta_bytes),
+            "expected_v": 64 * 8 * 4}
+
+
+def main():
+    rows = {"analytic_n1024_r8": analytic(), "measured_n64_r8": measured()}
+    a = rows["analytic_n1024_r8"]
+    ratio = a["fedgalore"]["uplink"] / a["fedavg_full"]["uplink"]
+    emit("comm/fedgalore_vs_full", 0.0,
+         f"uplink_ratio={ratio:.4f};v_payload_ok="
+         f"{rows['measured_n64_r8']['v_payload_bytes'] == rows['measured_n64_r8']['expected_v']}")
+    assert ratio < 0.05          # LoRA-like, far below dense
+    with open("bench_comm.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.fed import FedConfig, FedEngine
+from repro.data import FederatedBatcher, seq_classification
+from repro.launch.steps import galore_target_fn
+from repro.models import model as M
+
+
+def timed(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt
+
+
+def run_federated_trial(method: str, alpha, *, rounds=8, n_clients=4,
+                        local_steps=8, batch=8, seq=16, n_classes=4,
+                        examples=512, lr=2e-2, rank=4, seed=0,
+                        arch="qwen1.5-0.5b"):
+    """One federated fine-tuning run; returns final eval accuracy + curves."""
+    cfg = smoke_variant(get_config(arch))
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    task = seq_classification(examples, n_classes, seq, cfg.vocab_size,
+                              seed=seed)
+    batcher = FederatedBatcher(task, n_clients, batch, alpha=alpha, seed=seed)
+
+    def loss(p, b):
+        return M.loss_fn(p, cfg, b)
+
+    eng = FedEngine(FedConfig(method=method, rank=rank, lr=lr,
+                              local_steps=local_steps, seed=seed),
+                    loss, params, target_fn=galore_target_fn(cfg))
+    eval_b = batcher.eval_batch(256)
+    local_curve, val_curve, acc_curve = [], [], []
+    for _ in range(rounds):
+        batches = {k: jnp.asarray(v)
+                   for k, v in batcher.round_batches(local_steps).items()}
+        m = eng.run_round(batches)
+        gp = eng.global_params()
+        logits, _ = M.forward(gp, cfg, jnp.asarray(eval_b["tokens"]))
+        acc = float((np.asarray(logits[:, -1]).argmax(-1)
+                     == eval_b["labels"][:, -1]).mean())
+        local_curve.append(m["mean_final_loss"])
+        val_curve.append(float(M.loss_fn(gp, cfg,
+                                         {k: jnp.asarray(v)
+                                          for k, v in eval_b.items()})))
+        acc_curve.append(acc)
+    return {"acc": acc_curve[-1], "acc_curve": acc_curve,
+            "local_curve": local_curve, "val_curve": val_curve}
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,122 @@
+"""§Roofline: derive the three roofline terms per (arch × shape) from the
+dry-run's compiled artifacts (dryrun_single.json).
+
+  compute    = FLOPs_per_device / peak_bf16
+  memory     = HBM_bytes_per_device / hbm_bw
+  collective = ici_traffic_per_device / (links × link_bw)
+
+Notes on sourcing (see EXPERIMENTS.md §Roofline for caveats):
+  * cost_analysis of the SPMD-partitioned module is per-device; no extra
+    division by chip count.
+  * FLOPs/bytes come from the unrolled twin (XLA counts while bodies once).
+  * collective bytes are summed RESULT-buffer sizes of every collective op
+    in the post-SPMD HLO; ring traffic ≈ result for all-gather,
+    2× reduced size for all-reduce, 1× for all-to-all/permute. We apply
+    those multipliers and divide by 4 ICI links per chip (v5e 2D torus).
+  * MODEL_FLOPS = 6·N_active·tokens (per device share) — the useful-compute
+    yardstick; ratio < 1 of HLO flops indicates remat/capacity/dispatch
+    overhead.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [dryrun_single.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config, shape_variant
+from repro.launch.mesh import TPU_V5E
+
+PEAK = TPU_V5E["peak_bf16_flops"]
+HBM = TPU_V5E["hbm_bw"]
+ICI = TPU_V5E["ici_bw"]
+LINKS = 4          # v5e: 2D torus, 4 ICI links per chip
+
+# effective wire-traffic multiplier per collective kind (ring algorithms)
+TRAFFIC_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def model_flops_per_device(arch: str, shape_name: str, chips: int = 256) -> float:
+    cfg = shape_variant(get_config(arch), SHAPES[shape_name])
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch / chips
+
+
+def roofline_terms(entry: dict) -> dict:
+    flops = max(entry["flops"], 0.0)
+    hbm_bytes = max(entry["bytes_accessed"], 0.0)
+    coll = entry["collective_bytes"]
+    wire = sum(TRAFFIC_MULT[k] * max(v, 0) for k, v in coll.items()
+               if k in TRAFFIC_MULT)
+    t_compute = flops / PEAK
+    t_memory = hbm_bytes / HBM
+    t_coll = wire / (LINKS * ICI)
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])
+    return {"t_compute": t_compute, "t_memory": t_memory,
+            "t_collective": t_coll, "dominant": dom[0],
+            "bound_s": dom[1], "wire_bytes": wire}
+
+
+def analyze(path: str = "dryrun_single.json", chips: int = 256):
+    data = json.load(open(path))
+    rows = []
+    for arch in ASSIGNED_ARCHS:
+        for shape in SHAPES:
+            key = next((k for k in data if k.startswith(f"{arch}@{shape}@")),
+                       None)
+            if key is None or "error" in data[key]:
+                continue
+            terms = roofline_terms(data[key])
+            mf = model_flops_per_device(arch, shape, chips)
+            rows.append({
+                "arch": arch, "shape": shape, **terms,
+                "model_flops": mf,
+                "useful_ratio": mf / max(data[key]["flops"], 1.0),
+                "hlo_flops": data[key]["flops"],
+                "mem_temp_gb": (data[key]["memory"]["temp_bytes"] or 0) / 2**30,
+            })
+    return rows
+
+
+def print_table(rows):
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'coll_s':>10s} {'dominant':>10s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['t_compute']:10.3e} "
+              f"{r['t_memory']:10.3e} {r['t_collective']:10.3e} "
+              f"{r['dominant']:>10s} {r['useful_ratio']:7.2f}")
+
+
+def main(argv=None):
+    path = (argv or sys.argv[1:] or ["dryrun_single.json"])[0]
+    rows = analyze(path)
+    print_table(rows)
+    with open("roofline.json", "w") as f:
+        json.dump(rows, f, indent=1)
+    # Hillclimb candidate selection (§Perf): worst useful ratio, most
+    # collective-bound, most representative of the paper (train_4k pair).
+    by_useful = sorted((r for r in rows if r["shape"] == "train_4k"),
+                       key=lambda r: r["useful_ratio"])
+    by_coll = sorted(rows, key=lambda r: -(r["t_collective"]
+                                           / max(r["bound_s"], 1e-30)))
+    print("\nworst useful-compute (train):",
+          [f"{r['arch']}@{r['shape']}" for r in by_useful[:3]])
+    print("most collective-dominated:",
+          [f"{r['arch']}@{r['shape']}" for r in by_coll[:3]])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

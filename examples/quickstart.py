@@ -1,0 +1,48 @@
+"""Quickstart: federated GaLore fine-tuning in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a reduced qwen1.5 backbone, partitions a synthetic classification
+task across 4 non-IID clients (Dirichlet α=0.5), and runs 5 FedGaLore rounds:
+GaLoreAdamW clients + FedAvg aggregation + AJIVE second-moment sync.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.fed import FedConfig, FedEngine
+from repro.data import FederatedBatcher, seq_classification
+from repro.launch.steps import galore_target_fn
+from repro.models import model as M
+
+
+def main():
+    cfg = smoke_variant(get_config("qwen1.5-0.5b"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    task = seq_classification(n_examples=1024, n_classes=4, seq_len=16,
+                              vocab=cfg.vocab_size)
+    clients = FederatedBatcher(task, n_clients=4, batch_size=8, alpha=0.5)
+
+    engine = FedEngine(
+        FedConfig(method="fedgalore", rank=4, lr=3e-3, local_steps=4),
+        loss_fn=lambda p, b: M.loss_fn(p, cfg, b),
+        params=params,
+        target_fn=galore_target_fn(cfg))
+
+    eval_b = clients.eval_batch(256)
+    for rnd in range(5):
+        batches = {k: jnp.asarray(v)
+                   for k, v in clients.round_batches(4).items()}
+        metrics = engine.run_round(batches)
+        logits, _ = M.forward(engine.global_params(), cfg,
+                              jnp.asarray(eval_b["tokens"]))
+        acc = (np.asarray(logits[:, -1]).argmax(-1)
+               == eval_b["labels"][:, -1]).mean()
+        print(f"round {rnd}: local_loss={metrics['mean_final_loss']:.3f} "
+              f"val_acc={acc:.3f}")
+
+
+if __name__ == "__main__":
+    main()

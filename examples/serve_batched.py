@@ -1,0 +1,36 @@
+"""Batched serving example: prefill a batch of prompts and decode new tokens
+with KV-cache / recurrent-state reuse, across three architecture families
+(GQA dense, sliding-window dense, attention-free RWKV).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.launch.serve import generate
+from repro.models import model as M
+
+ARCHS = ["qwen1.5-0.5b", "starcoder2-7b", "rwkv6-1.6b"]
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    for arch in ARCHS:
+        cfg = smoke_variant(get_config(arch))
+        params = M.init_params(key, cfg)
+        prompts = jax.random.randint(jax.random.fold_in(key, 1), (4, 24), 0,
+                                     cfg.vocab_size)
+        t0 = time.time()
+        out = generate(params, cfg, prompts, new_tokens=16, cache_len=64,
+                       temperature=0.8, key=key)
+        dt = time.time() - t0
+        print(f"{arch:20s} family={cfg.family:6s} "
+              f"batch=4 prompt=24 +16 tokens in {dt:5.1f}s "
+              f"({4 * 16 / dt:6.1f} tok/s)  sample={out[0, -6:].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Pytree checkpointing: npz payload + JSON treedef manifest.
+
+Keys are slash-joined tree paths, values are host numpy arrays; restore
+rebuilds against a template pytree (so NamedTuple states and dtypes are
+preserved) and can re-shard onto a mesh via ``jax.device_put`` with the
+template's shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":       # npz has no bf16: lossless up
+            arr = arr.astype(np.float32)
+        out[key] = arr
+    return out
+
+
+def save(directory: str, step: int, tree: PyTree, name: str = "ckpt") -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = _flatten(tree)
+    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    manifest = {"step": step, "keys": sorted(flat),
+                "shapes": {k: list(v.shape) for k, v in flat.items()}}
+    with open(os.path.join(directory, f"{name}_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def restore(directory: str, step: int, template: PyTree,
+            name: str = "ckpt") -> PyTree:
+    path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    data = np.load(path)
+    leaves = jax.tree_util.tree_flatten_with_path(template)
+    paths, treedef = leaves[0], leaves[1]
+    out = []
+    for path_t, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path_t)
+        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        if hasattr(leaf, "sharding") and leaf.sharding is not None:
+            try:
+                arr = jax.device_put(arr, leaf.sharding)
+            except Exception:
+                pass
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(directory: str, name: str = "ckpt") -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for f in os.listdir(directory):
+        m = re.fullmatch(rf"{name}_(\d+)\.npz", f)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None

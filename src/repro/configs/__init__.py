@@ -1,0 +1,25 @@
+"""Architecture configs (one module per assigned arch) + input shapes."""
+from .base import (ArchConfig, get_config, list_configs, register,
+                   smoke_variant)
+from .shapes import (LONG_CONTEXT_WINDOW, SHAPES, ShapeSpec, cache_len,
+                     input_specs, shape_variant)
+
+# The ten architectures assigned to this paper (public pool).
+ASSIGNED_ARCHS = [
+    "granite-moe-1b-a400m",
+    "deepseek-v2-236b",
+    "command-r-35b",
+    "mistral-nemo-12b",
+    "qwen1.5-0.5b",
+    "pixtral-12b",
+    "jamba-1.5-large-398b",
+    "starcoder2-7b",
+    "musicgen-medium",
+    "rwkv6-1.6b",
+]
+
+__all__ = [
+    "ArchConfig", "get_config", "list_configs", "register", "smoke_variant",
+    "SHAPES", "ShapeSpec", "input_specs", "shape_variant", "cache_len",
+    "LONG_CONTEXT_WINDOW", "ASSIGNED_ARCHS",
+]

@@ -1,0 +1,85 @@
+"""The four assigned input shapes and ShapeDtypeStruct input specs.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable
+ShapeDtypeStruct stand-ins for every model input (never allocating) — the
+dry-run lowers against these.
+
+long_500k requires sub-quadratic attention: RWKV6 is O(1)-state, Jamba is
+Mamba + sparse attention, starcoder2 has a native 4096 window; every other
+(full-attention) arch runs a **sliding-window variant** (window=8192) at this
+shape — applied by ``shape_variant`` and recorded per-arch in EXPERIMENTS.md.
+Decode caches for windowed attention are ring buffers of size=window, so
+long-context decode memory is O(window), not O(context).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import ArchConfig
+
+LONG_CONTEXT_WINDOW = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_variant(cfg: ArchConfig, shape: ShapeSpec) -> ArchConfig:
+    """Arch adjustments a shape requires (the long_500k SWA carve-out)."""
+    if shape.name == "long_500k" and not cfg.rwkv and not cfg.sliding_window:
+        return dataclasses.replace(cfg, sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def cache_len(cfg: ArchConfig, shape: ShapeSpec) -> int:
+    """KV slots needed for a decode shape: the window for SWA ring buffers,
+    the full context otherwise."""
+    if cfg.sliding_window:
+        return min(shape.seq_len, cfg.sliding_window)
+    return shape.seq_len
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict:
+    """ShapeDtypeStruct inputs for (arch, shape). Keys by shape kind:
+
+      train   -> {tokens, labels[, embeds]}
+      prefill -> {tokens[, embeds]}
+      decode  -> {token, state}
+    """
+    cfg = shape_variant(cfg, shape)
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        n_text = s - cfg.frontend_tokens
+        spec = {"tokens": _sds((b, n_text), jnp.int32)}
+        if cfg.frontend_tokens:
+            spec["embeds"] = _sds((b, cfg.frontend_tokens, cfg.d_model),
+                                  jnp.bfloat16)
+        if shape.kind == "train":
+            spec["labels"] = _sds((b, n_text), jnp.int32)
+        return spec
+    # decode: one new token + a full cache/state at seq_len context
+    from ..models import model as model_lib
+    state = jax.eval_shape(
+        lambda: model_lib.init_decode_state(cfg, b, cache_len(cfg, shape)))
+    # A mid-stream decode state: position counter at seq_len.
+    return {"token": _sds((b,), jnp.int32), "state": state}

@@ -1,0 +1,17 @@
+"""FedGaLore core — the paper's contribution.
+
+Subspace alignment: GaLore-style gradient-subspace client optimization
+(`galore`, `projector`). State alignment: drift-robust synchronization of
+projected second moments via AJIVE (`ajive`, `state_sync`). Baseline federated
+LoRA methods and the 𝒯/𝒜/𝒮 round decomposition live in `fed`, `lora`,
+`aggregation`.
+"""
+from . import aggregation, ajive, fed, galore, lora, projector, state_sync
+from .fed import METHODS, FedConfig, FedEngine, FedMethodSpec
+from .galore import GaloreConfig, GaloreState, galore_adamw, scale_by_galore
+
+__all__ = [
+    "aggregation", "ajive", "fed", "galore", "lora", "projector",
+    "state_sync", "METHODS", "FedConfig", "FedEngine", "FedMethodSpec",
+    "GaloreConfig", "GaloreState", "galore_adamw", "scale_by_galore",
+]

@@ -1,0 +1,130 @@
+"""Server aggregation operators 𝒜 (Definition 3.2 + Table 1).
+
+Operate on *stacked* client pytrees: every leaf has a leading client axis K,
+so each operator is a single vectorized reduction (and maps 1:1 onto a
+weighted ``psum`` over the client mesh axis in the sharded runtime).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .lora import LoraPair, is_lora_pair, svd_truncate
+
+PyTree = Any
+
+
+def _norm_weights(weights: jnp.ndarray) -> jnp.ndarray:
+    w = jnp.asarray(weights, jnp.float32)
+    return w / jnp.sum(w)
+
+
+def _wavg(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Weighted average over the leading client axis."""
+    return jnp.tensordot(w, x.astype(jnp.float32), axes=(0, 0)).astype(x.dtype)
+
+
+def weighted_average(stacked: PyTree, weights) -> PyTree:
+    """Canonical FedAvg: θ̄ = Σ p̃ᵢ θᵢ (Lemma 4.1's convex combination)."""
+    w = _norm_weights(weights)
+    return jax.tree_util.tree_map(lambda x: _wavg(x, w), stacked)
+
+
+def factor_average(stacked_adapters: PyTree, weights) -> PyTree:
+    """FedIT: average A and B factors separately.
+
+    ΔW̄ = (Σ p̃ᵢ Bᵢ)(Σ p̃ᵢ Aᵢ) — stays rank ≤ r but is a biased estimate of the
+    mean lift (the cross terms are dropped), the update-space-mismatch culprit.
+    """
+    w = _norm_weights(weights)
+
+    def agg(ad):
+        if ad is None:
+            return None
+        return LoraPair(a=_wavg(ad.a, w), b=_wavg(ad.b, w))
+
+    return jax.tree_util.tree_map(
+        agg, stacked_adapters,
+        is_leaf=lambda x: x is None or is_lora_pair(x))
+
+
+def lift_average(stacked_adapters: PyTree, weights, scale: float = 1.0) -> PyTree:
+    """FLoRA / FR-LoRA: lift each client adapter to ΔWᵢ = scale·BᵢAᵢ and average
+    in the ambient space. Rank can grow to K·r (update-space mismatch, §4.1).
+
+    Returns a pytree of dense deltas (None for non-adapted leaves).
+    """
+    w = _norm_weights(weights)
+
+    def agg(ad):
+        if ad is None:
+            return None
+        # einsum over client axis: Σ_k w_k B_k A_k, never materializing all K lifts.
+        return scale * jnp.einsum("k,kmr,krn->mn", w,
+                                  ad.b.astype(jnp.float32),
+                                  ad.a.astype(jnp.float32))
+
+    return jax.tree_util.tree_map(
+        agg, stacked_adapters,
+        is_leaf=lambda x: x is None or is_lora_pair(x))
+
+
+def lora_fair_refine(stacked_adapters: PyTree, weights, scale: float = 1.0,
+                     ridge: float = 1e-6) -> PyTree:
+    """LoRA-Fair: factor averaging followed by a server-side refinement of B̄
+    toward the true mean lift:  B̄' = argmin_B ||scale·B Ā − ΔW̄_lift||²_F,
+    solved in closed form with a ridge term.
+    """
+    w = _norm_weights(weights)
+
+    def agg(ad):
+        if ad is None:
+            return None
+        a_bar = _wavg(ad.a, w).astype(jnp.float32)             # (r, n)
+        mean_lift = jnp.einsum("k,kmr,krn->mn", w,
+                               ad.b.astype(jnp.float32),
+                               ad.a.astype(jnp.float32))        # (m, n)
+        r = a_bar.shape[0]
+        gram = a_bar @ a_bar.T + ridge * jnp.eye(r, dtype=jnp.float32)
+        b_ref = jnp.linalg.solve(gram, (a_bar @ mean_lift.T)).T / max(scale, 1e-12)
+        return LoraPair(a=a_bar.astype(ad.a.dtype), b=b_ref.astype(ad.b.dtype))
+
+    return jax.tree_util.tree_map(
+        agg, stacked_adapters,
+        is_leaf=lambda x: x is None or is_lora_pair(x))
+
+
+def fr_lora_merge(base_params: PyTree, stacked_adapters: PyTree, weights,
+                  scale: float = 1.0) -> PyTree:
+    """FR-LoRA: lift-average the client adapters and merge the full-rank delta
+    into the base weights (the residual beyond rank r is *kept*, in W0, rather
+    than truncated). Fresh zero adapters start the next round.
+    """
+    deltas = lift_average(stacked_adapters, weights, scale)
+
+    def merge(p, d):
+        if d is None:
+            return p
+        return p + d.astype(p.dtype)
+
+    return jax.tree_util.tree_map(merge, base_params, deltas,
+                                  is_leaf=lambda x: x is None)
+
+
+def dense_delta_average(stacked_deltas: PyTree, weights) -> PyTree:
+    """FedAvg on dense target-module deltas (FedAvg-Full / FedGaLore line 11)."""
+    return weighted_average(stacked_deltas, weights)
+
+
+def truncate_to_rank(deltas: PyTree, rank: int) -> PyTree:
+    """Post-hoc SVD truncation of dense deltas back to rank r (diagnostic /
+    the 'Averaging + SVD' baseline in Appendix F)."""
+    def trunc(d):
+        if d is None:
+            return None
+        pair = svd_truncate(d.astype(jnp.float32), rank)
+        return (pair.b @ pair.a).astype(d.dtype)
+
+    return jax.tree_util.tree_map(trunc, deltas, is_leaf=lambda x: x is None)

@@ -1,0 +1,190 @@
+"""AJIVE — Angle-based Joint and Individual Variation Explained.
+
+Implements Algorithm 5 (Appendix E) in pure jnp, following the mvlearn logic:
+
+  Phase 1  per-view economy SVD at an initial signal rank; singular-value
+           threshold at the r/r+1 midpoint.
+  Phase 2  joint SVD of the concatenated score (U) matrices; joint rank either
+           fixed (paper production choice: k = r) or estimated from the
+           Wedin + random-direction bounds via seeded resampling.
+  Phase 3  per-view decomposition  X = J + I + E  with
+           J = U_joint U_jointᵀ X (joint), I = thresholded SVD of the residual
+           (individual), E = the rest (noise).
+
+The federated server applies this to the lifted second-moment views
+``V^{i} = ṽ_T^{i} R_kᵀ`` and broadcasts the shared component (§5 "Why AJIVE").
+All SVDs are economy-size and MXU-lowerable; resampling uses explicit keys so
+the estimator is deterministic and jit-safe with static ranks.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class AjiveResult(NamedTuple):
+    joint: jnp.ndarray        # (k_views, n, m) per-view joint components J^(i)
+    individual: jnp.ndarray   # (k_views, n, m) per-view individual I^(i)
+    noise: jnp.ndarray        # (k_views, n, m) E^(i)
+    joint_basis: jnp.ndarray  # (n, r_joint) shared column basis U_joint
+    joint_mean: jnp.ndarray   # (n, m) weighted mean of joint components
+    sv_joint: jnp.ndarray     # singular values of the stacked score matrix
+
+
+def _center(x):
+    return x - jnp.mean(x, axis=0, keepdims=True)
+
+
+def _rank_truncate(x, rank: int):
+    u, s, vt = jnp.linalg.svd(x, full_matrices=False)
+    return u[:, :rank], s[:rank], vt[:rank], s
+
+
+def wedin_bound(x, u, s, vt, key, n_samples: int = 20) -> jnp.ndarray:
+    """Resampled Wedin-style perturbation bound for one view (Phase 2 aid).
+
+    Estimates how far the signal scores may rotate under the residual noise:
+    samples random unit directions, measures ||Eᵀ u||/s_min style statistics.
+    Returns a squared-singular-value cutoff contribution in [0, 1]-scale.
+    """
+    resid = x - (u * s[None, :]) @ vt
+    n, m = x.shape
+    k = u.shape[1]
+    keys = jax.random.split(key, n_samples)
+
+    def one(kk):
+        kv, ku = jax.random.split(kk)
+        dv = jax.random.normal(kv, (m,))
+        dv = dv / (jnp.linalg.norm(dv) + 1e-12)
+        du = jax.random.normal(ku, (n,))
+        du = du / (jnp.linalg.norm(du) + 1e-12)
+        return jnp.maximum(jnp.linalg.norm(resid @ dv),
+                           jnp.linalg.norm(resid.T @ du))
+
+    est = jnp.percentile(jax.vmap(one)(keys), 95)
+    sin_theta = jnp.minimum(est / (s[-1] + 1e-12), 1.0)
+    return sin_theta
+
+
+def random_direction_bound(shapes: Sequence[tuple], ranks: Sequence[int],
+                           key, n_samples: int = 20) -> jnp.ndarray:
+    """Null distribution of the top squared singular value of stacked random
+    orthonormal score matrices (Phase 2 'random bound')."""
+    def one(kk):
+        total = 0
+        tops = []
+        subkeys = jax.random.split(kk, len(shapes))
+        mats = []
+        for (n, _), r, sk in zip(shapes, ranks, subkeys):
+            g = jax.random.normal(sk, (n, r))
+            q, _ = jnp.linalg.qr(g)
+            mats.append(q)
+        m = jnp.concatenate(mats, axis=1)
+        s = jnp.linalg.svd(m, compute_uv=False)
+        return s[0] ** 2
+
+    keys = jax.random.split(key, n_samples)
+    vals = jax.vmap(one)(keys)
+    return jnp.percentile(vals, 95)
+
+
+def ajive(views: jnp.ndarray, signal_ranks, joint_rank: Optional[int] = None,
+          individual_ranks=None, center: bool = True,
+          key: Optional[jax.Array] = None,
+          return_rank_diag: bool = False):
+    """Run AJIVE on ``views`` of shape (k_views, n, m).
+
+    ``signal_ranks``: int or per-view list — Phase 1 initial signal rank.
+    ``joint_rank``: fixed joint rank (paper: k = r). If None, estimated from
+    the Wedin/random bounds (requires ``key``); the estimate is returned as a
+    *mask* applied to a max-rank basis so shapes stay static under jit.
+    """
+    k_views, n, m = views.shape
+    if isinstance(signal_ranks, int):
+        signal_ranks = [signal_ranks] * k_views
+    if center:
+        views = jax.vmap(_center)(views)
+
+    # ---- Phase 1: per-view signal extraction -------------------------------
+    scores, thresholds, svds = [], [], []
+    for i in range(k_views):
+        r = signal_ranks[i]
+        u, s, vt, s_full = _rank_truncate(views[i], r)
+        scores.append(u)
+        # SV threshold: midpoint between r-th and (r+1)-th singular value.
+        nxt = s_full[r] if r < s_full.shape[0] else jnp.zeros([])
+        thresholds.append(0.5 * (s_full[r - 1] + nxt))
+        svds.append((u, s, vt))
+
+    # ---- Phase 2: score-space segmentation ----------------------------------
+    stacked = jnp.concatenate(scores, axis=1)        # (n, sum r_i)
+    u_joint_full, d_joint, _ = jnp.linalg.svd(stacked, full_matrices=False)
+
+    if joint_rank is None:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        kw, kr = jax.random.split(key)
+        # Wedin: aggregate per-view sin-theta into a squared-SV cutoff.
+        sin_thetas = []
+        wkeys = jax.random.split(kw, k_views)
+        for i in range(k_views):
+            u, s, vt = svds[i]
+            sin_thetas.append(wedin_bound(views[i], u, s, vt, wkeys[i]))
+        wedin_cut = sum(1.0 - jnp.minimum(st, 1.0) ** 2 for st in sin_thetas)
+        wedin_cut = k_views - wedin_cut + 1e-6  # cutoff on squared SVs
+        rand_cut = random_direction_bound([(n, m)] * k_views, signal_ranks, kr)
+        cutoff = jnp.maximum(wedin_cut, rand_cut)
+        rank_mask = (d_joint ** 2 > cutoff)
+        max_joint = min(min(signal_ranks), u_joint_full.shape[1])
+        mask = rank_mask[:max_joint].astype(views.dtype)
+        u_joint = u_joint_full[:, :max_joint] * mask[None, :]
+        est_rank = jnp.sum(rank_mask[:max_joint])
+    else:
+        u_joint = u_joint_full[:, :joint_rank]
+        est_rank = jnp.asarray(joint_rank)
+
+    # ---- Phase 3: final decomposition ---------------------------------------
+    proj = u_joint @ u_joint.T                       # (n, n) joint projector
+    joints, individuals, noises = [], [], []
+    for i in range(k_views):
+        x = views[i]
+        j = proj @ x
+        resid = x - j
+        r_ind = (individual_ranks[i] if individual_ranks is not None
+                 else signal_ranks[i])
+        ui, si, vti, si_full = _rank_truncate(resid, r_ind)
+        # Keep only components above the Phase-1 view threshold.
+        keep = (si > thresholds[i]).astype(x.dtype)
+        ind = (ui * (si * keep)[None, :]) @ vti
+        joints.append(j)
+        individuals.append(ind)
+        noises.append(x - j - ind)
+
+    joint = jnp.stack(joints)
+    result = AjiveResult(joint=joint,
+                         individual=jnp.stack(individuals),
+                         noise=jnp.stack(noises),
+                         joint_basis=u_joint,
+                         joint_mean=jnp.mean(joint, axis=0),
+                         sv_joint=d_joint)
+    if return_rank_diag:
+        return result, est_rank
+    return result
+
+
+def ajive_sync(views: jnp.ndarray, rank: int,
+               weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Server-side second-moment synchronization (Algorithm 1, line 12).
+
+    views: (k_views, n, m) lifted second-moment matrices V^{i} = ṽ^{i} R_kᵀ.
+    Returns the drift-robust shared estimate v̄ (n, m): the weighted mean of
+    the per-view joint components, with joint rank = ``rank`` (paper sets the
+    AJIVE joint rank to the client projector rank r).
+    """
+    res = ajive(views, signal_ranks=rank, joint_rank=rank, center=False)
+    if weights is None:
+        return res.joint_mean
+    w = weights / jnp.sum(weights)
+    return jnp.einsum("k,knm->nm", w, res.joint)

@@ -1,0 +1,349 @@
+"""Federated fine-tuning engine — 𝒯 / 𝒜 / 𝒮 composition (paper §3, Alg. 1).
+
+This is the *reference* engine used by tests and the paper-table benchmarks:
+clients are vectorized with ``jax.vmap`` over a leading client axis (the same
+mapping the production runtime realizes as a mesh axis), local steps run under
+``jax.lax.scan``, and each method is a (trainable-kind, optimizer,
+aggregation, state-sync) 4-tuple per Table 1:
+
+  ============  =========  ===========  ==============  =======
+  method        trainable  optimizer 𝒯  aggregation 𝒜   sync 𝒮
+  ============  =========  ===========  ==============  =======
+  fedavg_full   dense      AdamW        dense avg       none
+  fedit         LoRA(A,B)  Adam         factor avg      none
+  ffa_lora      LoRA(B)    SGD          factor avg      none
+  lora_fair     LoRA(A,B)  SGD          factor avg+ref  none
+  flora         LoRA(A,B)  AdamW        lift ΔW, merge  none
+  fr_lora       LoRA(A,B)  AdamW        lift ΔW, merge
+                                        + rank-r refac  none
+  fedgalore-    dense      GaLoreAdamW  dense avg       none
+  fedgalore     dense      GaLoreAdamW  dense avg       AJIVE(ṽ)
+  ============  =========  ===========  ==============  =======
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import aggregation as agg
+from . import galore as gal
+from . import lora as lora_lib
+from . import projector as proj
+from . import state_sync as sync_lib
+from .. import optim as optim_lib
+from ..optim.base import apply_updates
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FedMethodSpec:
+    name: str
+    trainable: str          # 'dense' | 'lora' | 'lora_b' | 'galore'
+    optimizer: str          # 'sgd' | 'sgdm' | 'adam' | 'adamw' | 'galore_adamw'
+    aggregation: str        # 'dense_avg'|'factor_avg'|'fair'|'lift_merge'|'lift_refac'
+    state_sync: str         # 'none' | 'avg' | 'avg_svd' | 'ajive'
+
+
+METHODS: Dict[str, FedMethodSpec] = {
+    "fedavg_full": FedMethodSpec("fedavg_full", "dense", "adamw", "dense_avg", "none"),
+    "fedit": FedMethodSpec("fedit", "lora", "adam", "factor_avg", "none"),
+    "ffa_lora": FedMethodSpec("ffa_lora", "lora_b", "sgd", "factor_avg", "none"),
+    "lora_fair": FedMethodSpec("lora_fair", "lora", "sgd", "fair", "none"),
+    "flora": FedMethodSpec("flora", "lora", "adamw", "lift_merge", "none"),
+    "fr_lora": FedMethodSpec("fr_lora", "lora", "adamw", "lift_refac", "none"),
+    "fedgalore": FedMethodSpec("fedgalore", "galore", "galore_adamw", "dense_avg", "ajive"),
+    "fedgalore_minus": FedMethodSpec("fedgalore_minus", "galore", "galore_adamw",
+                                     "dense_avg", "none"),
+    # extra ablations beyond the paper's table
+    "fedgalore_avg": FedMethodSpec("fedgalore_avg", "galore", "galore_adamw",
+                                   "dense_avg", "avg"),
+    "fedgalore_avg_svd": FedMethodSpec("fedgalore_avg_svd", "galore", "galore_adamw",
+                                       "dense_avg", "avg_svd"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    method: str = "fedgalore"
+    rank: int = 8
+    lora_scale: float = 2.0          # alpha / r
+    lr: float = 1e-3
+    weight_decay: float = 0.0
+    clip_norm: Optional[float] = 1.0   # Assumption 3.8 (bounded G)
+    local_steps: int = 8               # T
+    rounds: int = 10                   # K
+    adaptive_refreshes: int = 2        # S (SVD->random schedule)
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    seed: int = 0
+    reset_opt_each_round: bool = True  # 𝒮 'none' => reinit each round
+
+
+# ------------------------------------------------------------ trainables ----
+
+def split_trainable(params: PyTree, target_fn) -> tuple:
+    """dense/galore trainable: the target leaves themselves; the rest frozen."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    train, frozen = [], []
+    for path, p in leaves:
+        pstr = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in path)
+        if p.ndim == 2 and target_fn(pstr, p):
+            train.append(p)
+            frozen.append(None)
+        else:
+            train.append(None)
+            frozen.append(p)
+    return (jax.tree_util.tree_unflatten(treedef, train),
+            jax.tree_util.tree_unflatten(treedef, frozen))
+
+
+def merge_dense(frozen: PyTree, trainable: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda f, t: t if f is None else f, frozen, trainable,
+        is_leaf=lambda x: x is None)
+
+
+def merge_lora(base: PyTree, adapters: PyTree, scale: float,
+               freeze_a: bool = False) -> PyTree:
+    def merge(p, ad):
+        if ad is None:
+            return p
+        a = jax.lax.stop_gradient(ad.a) if freeze_a else ad.a
+        return p + (scale * (ad.b @ a)).astype(p.dtype)
+    return jax.tree_util.tree_map(merge, base, adapters,
+                                  is_leaf=lora_lib.is_lora_pair)
+
+
+# -------------------------------------------------------------- the engine --
+
+class FedEngine:
+    """Reference federated simulation. ``loss_fn(params, batch) -> scalar``."""
+
+    def __init__(self, cfg: FedConfig, loss_fn: Callable, params: PyTree,
+                 target_fn: Callable = None, eval_fn: Callable = None):
+        self.cfg = cfg
+        self.spec = METHODS[cfg.method]
+        self.loss_fn = loss_fn
+        self.eval_fn = eval_fn
+        self.target_fn = target_fn or (lambda p, x: True)
+        self.base_params = params
+        key = jax.random.PRNGKey(cfg.seed)
+
+        if self.spec.trainable in ("dense", "galore"):
+            self.global_trainable, self.frozen = split_trainable(params, self.target_fn)
+        else:
+            self.global_trainable = lora_lib.tree_lora_init(
+                key, params, self.target_fn, cfg.rank)
+            self.frozen = params   # LoRA: base stays whole, delta is additive
+
+        self.galore_cfg = gal.GaloreConfig(
+            rank=cfg.rank, refresh_every=10 ** 9,   # engine refreshes manually
+            adaptive_steps=cfg.adaptive_refreshes, b1=cfg.b1, b2=cfg.b2,
+            eps=cfg.eps, refresh_mode="auto")
+        self.tx = self._make_tx()
+        self._local_train = jax.jit(jax.vmap(self._local_train_one,
+                                             in_axes=(0, 0, 0)))
+        self.round_idx = 0
+        self.synced_v = None   # lifted+projected ṽ init from 𝒮
+
+    # ----------------------------------------------------------- optimizer --
+    def _make_tx(self):
+        c = self.cfg
+        o = self.spec.optimizer
+        if o == "sgd":
+            return optim_lib.sgd(c.lr, clip_norm=c.clip_norm)
+        if o == "sgdm":
+            return optim_lib.sgd(c.lr, momentum=0.9, clip_norm=c.clip_norm)
+        if o == "adam":
+            return optim_lib.adam(c.lr, c.b1, c.b2, c.eps, clip_norm=c.clip_norm)
+        if o == "adamw":
+            return optim_lib.adamw(c.lr, c.b1, c.b2, c.eps, c.weight_decay,
+                                   clip_norm=c.clip_norm)
+        if o == "galore_adamw":
+            return gal.galore_adamw(self.galore_cfg, c.lr, c.weight_decay,
+                                    seed=c.seed, clip_norm=c.clip_norm)
+        raise ValueError(o)
+
+    # -------------------------------------------------------------- 𝒯 -------
+    def _trainable_loss(self, trainable, batch):
+        if self.spec.trainable in ("dense", "galore"):
+            params = merge_dense(self.frozen, trainable)
+        else:
+            params = merge_lora(self.frozen, trainable, self.cfg.lora_scale,
+                                freeze_a=(self.spec.trainable == "lora_b"))
+        return self.loss_fn(params, batch)
+
+    def _local_train_one(self, trainable, opt_state, batches):
+        """T local steps on one client (lax.scan) — Definition 3.1."""
+        def step(carry, batch):
+            tr, st = carry
+            loss, grads = jax.value_and_grad(self._trainable_loss)(tr, batch)
+            updates, st = self.tx.update(grads, st, tr)
+            tr = apply_updates(tr, updates)
+            return (tr, st), loss
+        (trainable, opt_state), losses = jax.lax.scan(
+            step, (trainable, opt_state), batches)
+        return trainable, opt_state, losses
+
+    def _init_client_opt_states(self, n_clients: int):
+        """Round-start InitState (Eq. 5): fresh states, then install synced ṽ
+        and refresh the projector for the new round."""
+        def init_one(i):
+            st = self.tx.init(self.global_trainable)
+            if self.spec.optimizer == "galore_adamw":
+                g = gal.galore_state_of(st)
+                g = gal.with_seed(g, self.cfg.seed + self.round_idx)  # s_k
+                g = g._replace(count=jnp.asarray(
+                    self.round_idx * self.cfg.local_steps, jnp.int32))
+                if self.synced_v is not None:
+                    g = gal.with_projected_v(g, self.synced_v)
+                g = gal.manual_refresh(self.galore_cfg, g, self.round_idx)
+                st = gal.replace_galore_state(st, g)
+            return st
+        states = [init_one(i) for i in range(n_clients)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+    # ------------------------------------------------------------ a round ---
+    def run_round(self, client_batches: PyTree, weights=None):
+        """client_batches: pytree with leading axes (K clients, T steps, ...).
+
+        Returns dict of metrics. Mutates engine global state.
+        """
+        k_clients = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+        w = (jnp.full((k_clients,), 1.0 / k_clients) if weights is None
+             else jnp.asarray(weights, jnp.float32) / jnp.sum(jnp.asarray(weights)))
+
+        stacked_trainable = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (k_clients,) + x.shape),
+            self.global_trainable)
+        opt_states = self._init_client_opt_states(k_clients)
+
+        out_trainable, out_opt, losses = self._local_train(
+            stacked_trainable, opt_states, client_batches)
+
+        self._aggregate(out_trainable, w)
+        self._sync_states(out_opt, w)
+        self.round_idx += 1
+        return {"local_loss": losses,                      # (K, T)
+                "mean_final_loss": float(jnp.mean(losses[:, -1]))}
+
+    # -------------------------------------------------------------- 𝒜 -------
+    def _aggregate(self, stacked, w):
+        s = self.spec.aggregation
+        c = self.cfg
+        if s == "dense_avg":
+            self.global_trainable = agg.dense_delta_average(stacked, w)
+        elif s == "factor_avg":
+            self.global_trainable = agg.factor_average(stacked, w)
+        elif s == "fair":
+            self.global_trainable = agg.lora_fair_refine(stacked, w, c.lora_scale)
+        elif s in ("lift_merge", "lift_refac"):
+            deltas = agg.lift_average(stacked, w, c.lora_scale)
+            if s == "lift_merge":
+                # FLoRA: the full-rank average reaches every client via the
+                # merged base; adapters restart from zero.
+                self.frozen = jax.tree_util.tree_map(
+                    lambda p, d: p if d is None else p + d.astype(p.dtype),
+                    self.frozen, deltas, is_leaf=lambda x: x is None)
+                self.global_trainable = self._fresh_adapters()
+            else:
+                # FR-LoRA: rank-r refactorization carries what fits in the
+                # adapters; the residual merges into the base (kept, not lost).
+                new_ad, resid = [], []
+                dl, treedef = jax.tree_util.tree_flatten(
+                    deltas, is_leaf=lambda x: x is None)
+                for d in dl:
+                    if d is None:
+                        new_ad.append(None)
+                        resid.append(None)
+                    else:
+                        pair = lora_lib.svd_truncate(d / max(c.lora_scale, 1e-12),
+                                                     c.rank)
+                        new_ad.append(pair)
+                        resid.append(d - c.lora_scale * (pair.b @ pair.a))
+                self.global_trainable = jax.tree_util.tree_unflatten(treedef, new_ad)
+                resid = jax.tree_util.tree_unflatten(treedef, resid)
+                self.frozen = jax.tree_util.tree_map(
+                    lambda p, r: p if r is None else p + r.astype(p.dtype),
+                    self.frozen, resid, is_leaf=lambda x: x is None)
+        else:
+            raise ValueError(s)
+
+    def _fresh_adapters(self):
+        key = jax.random.PRNGKey(self.cfg.seed + 1000 + self.round_idx)
+        return lora_lib.tree_lora_init(key, self.base_params, self.target_fn,
+                                       self.cfg.rank)
+
+    # -------------------------------------------------------------- 𝒮 -------
+    def _sync_states(self, stacked_opt_states, w):
+        if self.spec.state_sync == "none" or self.spec.optimizer != "galore_adamw":
+            self.synced_v = None
+            return
+        g_stack = gal.galore_state_of(stacked_opt_states)
+        v_stack_tree = gal.extract_projected_v(g_stack)     # leaves (K, ., r)
+        basis_tree = gal.extract_bases(g_stack)             # leaves (K, dim, r)
+
+        vs, treedef = jax.tree_util.tree_flatten(v_stack_tree,
+                                                 is_leaf=lambda x: x is None)
+        bs = jax.tree_util.tree_leaves(basis_tree, is_leaf=lambda x: x is None)
+        synced = []
+        for v_stack, b_stack in zip(vs, bs):
+            if v_stack is None:
+                synced.append(None)
+                continue
+            rank = b_stack.shape[-1]
+            side = proj.RIGHT if v_stack.shape[-1] == rank else proj.LEFT
+
+            def sync_one(v_cl, b_cl):
+                # v_cl (K, m, r)|(K, r, n); b_cl (K, dim, r). Lift each
+                # client's ṽ with its *own* basis (identical across clients
+                # in the seeded-random phase), synchronize, re-project onto
+                # the shared (client-0) end-of-round basis.
+                if side == proj.RIGHT:
+                    views = jnp.einsum("kmr,knr->kmn",
+                                       v_cl.astype(jnp.float32),
+                                       b_cl.astype(jnp.float32))
+                else:
+                    views = jnp.einsum("kmr,krn->kmn",
+                                       b_cl.astype(jnp.float32),
+                                       v_cl.astype(jnp.float32))
+                lifted = self._sync_lifted(views, w, rank)
+                return sync_lib.project_state(lifted, b_cl[0], side)
+
+            if v_stack.ndim == 4:        # stacked scan blocks (K, nb, ., r)
+                synced.append(jax.vmap(sync_one, in_axes=(1, 1))(v_stack,
+                                                                 b_stack))
+            else:
+                synced.append(sync_one(v_stack, b_stack))
+        self.synced_v = jax.tree_util.tree_unflatten(treedef, synced)
+
+    def _sync_lifted(self, views, w, rank):
+        s = self.spec.state_sync
+        if s == "ajive":
+            from .ajive import ajive_sync
+            return ajive_sync(views, rank=rank, weights=w)
+        if s == "avg":
+            return jnp.einsum("k,kmn->mn", w, views)
+        if s == "avg_svd":
+            avg = jnp.einsum("k,kmn->mn", w, views)
+            u, sv, vt = jnp.linalg.svd(avg, full_matrices=False)
+            return (u[:, :rank] * sv[:rank][None, :]) @ vt[:rank]
+        raise ValueError(s)
+
+    # ------------------------------------------------------------- helpers --
+    def global_params(self) -> PyTree:
+        if self.spec.trainable in ("dense", "galore"):
+            return merge_dense(self.frozen, self.global_trainable)
+        return merge_lora(self.frozen, self.global_trainable, self.cfg.lora_scale)
+
+    def evaluate(self, batch) -> float:
+        if self.eval_fn is None:
+            return float(self.loss_fn(self.global_params(), batch))
+        return float(self.eval_fn(self.global_params(), batch))

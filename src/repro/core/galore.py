@@ -1,0 +1,343 @@
+"""GaLoreAdamW — gradient-subspace AdamW (paper §5 + Appendix A.1).
+
+For each *target block* ``W ∈ R^{m×n}`` the optimizer keeps a rank-r basis and
+AdamW moments in the projected shape (``(m,r)`` right / ``(r,n)`` left), never
+materializing dense ``m×n`` states:
+
+    g̃  = project(g, B)                      # MXU GEMM
+    m̃  = β₁ m̃ + (1-β₁) g̃
+    ṽ  = β₂ ṽ + (1-β₂) g̃²
+    ũ  = m̂ / (√v̂ + ε)                       # bias-corrected
+    u  = project_back(ũ, B)                 # MXU GEMM
+    W ← W - η u - η λ W                      # ambient-space AdamW step
+
+The projector refreshes every ``τ`` steps: data-driven (RSVD/SVD of the current
+gradient) for the first ``S`` refreshes, then **seeded random orthonormal** —
+the basis is a pure function of ``(s_k, refresh_idx, block_id)`` so the server
+only ever broadcasts the integer seed (Appendix D). On refresh the buffers are
+re-expressed with the r×r transfer ``B_oldᵀ B_new`` (Appendix A.1).
+
+Non-target leaves (biases, norms) fall back to dense AdamW moments.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import projector as proj
+from ..optim.base import GradientTransformation
+
+PyTree = Any
+
+
+class GaloreBlockState(NamedTuple):
+    basis: jnp.ndarray   # (dim, r) fp32, orthonormal columns
+    m: jnp.ndarray       # projected first moment, fp32
+    v: jnp.ndarray       # projected second moment, fp32 (elementwise)
+
+
+class DenseMoments(NamedTuple):
+    m: jnp.ndarray
+    v: jnp.ndarray
+
+
+class GaloreState(NamedTuple):
+    count: jnp.ndarray   # int32 step counter
+    seed: jnp.ndarray    # uint32 round seed s_k (server-broadcast)
+    blocks: PyTree       # per-leaf GaloreBlockState | DenseMoments
+
+
+def default_target_fn(path: str, leaf: jnp.ndarray) -> bool:
+    """Target = any matrix leaf (attention/MLP projections). 3-D leaves are
+    stacked scan blocks: one independent projector per layer (leading dim)."""
+    return leaf.ndim in (2, 3)
+
+
+@dataclasses.dataclass(frozen=True)
+class GaloreConfig:
+    rank: int = 8
+    refresh_every: int = 200          # tau
+    adaptive_steps: int = 2           # S data-driven refreshes, then random
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    oversample: int = 8
+    use_exact_svd: bool = False
+    # 'auto': lax.cond picks RSVD vs random by refresh index (both lowered)
+    # 'random': only the seeded-random branch is compiled (production dry-run)
+    # 'svd': only the data-driven branch (warmup-phase step function)
+    refresh_mode: str = "auto"
+    bias_correction: bool = True
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _block_rank(cfg: GaloreConfig, shape) -> int:
+    return min(cfg.rank, min(shape[-2:]))
+
+
+def _proj_shape(shape, rank: int, side: str):
+    """Projected buffer shape, preserving leading stacked dims."""
+    lead = tuple(shape[:-2])
+    m, n = shape[-2:]
+    return lead + ((m, rank) if side == proj.RIGHT else (rank, n))
+
+
+def _block_keys(seed, refresh_idx, block_id, lead_shape):
+    """One key for a 2-D block; per-layer keys for stacked (nb, m, n) blocks."""
+    key = proj.seeded_block_key(seed, refresh_idx, block_id)
+    if not lead_shape:
+        return key
+    return proj.stacked_keys(key, lead_shape[0])
+
+
+def galore_init(cfg: GaloreConfig, params: PyTree,
+                target_fn: Callable = default_target_fn,
+                seed: int = 0) -> GaloreState:
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    block_states = []
+    for block_id, (path, p) in enumerate(leaves):
+        if target_fn(_path_str(path), p) and p.ndim >= 2:
+            side = proj.proj_side(p.shape)
+            r = _block_rank(cfg, p.shape)
+            dim = proj.basis_dim(p.shape)
+            keys = _block_keys(jnp.uint32(seed), jnp.uint32(0), block_id,
+                               p.shape[:-2])
+            basis = proj.random_basis_nd(keys, dim, r)
+            pshape = _proj_shape(p.shape, r, side)
+            block_states.append(GaloreBlockState(
+                basis=basis,
+                m=jnp.zeros(pshape, jnp.float32),
+                v=jnp.zeros(pshape, jnp.float32)))
+        else:
+            block_states.append(DenseMoments(
+                m=jnp.zeros(p.shape, jnp.float32),
+                v=jnp.zeros(p.shape, jnp.float32)))
+    return GaloreState(count=jnp.zeros([], jnp.int32),
+                       seed=jnp.asarray(seed, jnp.uint32),
+                       blocks=jax.tree_util.tree_unflatten(treedef, block_states))
+
+
+def _refresh_basis(cfg: GaloreConfig, g32, old: GaloreBlockState,
+                   refresh_idx, seed, block_id, side, rank):
+    dim = proj.basis_dim(g32.shape)
+    keys = _block_keys(seed, refresh_idx, block_id, g32.shape[:-2])
+
+    def random_branch(_):
+        return proj.random_basis_nd(keys, dim, rank)
+
+    def data_branch(_):
+        if cfg.use_exact_svd:
+            return proj.svd_basis_nd(g32, rank, side)
+        return proj.rsvd_basis_nd(g32, rank, side, keys, cfg.oversample)
+
+    if cfg.refresh_mode == "random":
+        new_basis = random_branch(None)
+    elif cfg.refresh_mode == "svd":
+        new_basis = data_branch(None)
+    else:
+        new_basis = jax.lax.cond(refresh_idx < cfg.adaptive_steps,
+                                 data_branch, random_branch, operand=None)
+    m = proj.reproject(old.m, old.basis, new_basis, side)
+    # ṽ is an elementwise second moment; the change-of-basis transfer is the
+    # paper's Appendix A.1 rule — clamp to keep the sqrt well-defined.
+    v = jnp.maximum(proj.reproject(old.v, old.basis, new_basis, side), 0.0)
+    return GaloreBlockState(basis=new_basis, m=m, v=v)
+
+
+def _block_update(cfg: GaloreConfig, g, st: GaloreBlockState, count,
+                  refresh_idx, do_refresh, seed, block_id):
+    side = proj.proj_side(g.shape)
+    rank = st.basis.shape[-1]
+    g32 = g.astype(jnp.float32)
+
+    st = jax.lax.cond(
+        do_refresh,
+        lambda s: _refresh_basis(cfg, g32, s, refresh_idx, seed, block_id,
+                                 side, rank),
+        lambda s: s, st)
+
+    gt = proj.project(g32, st.basis, side)
+    m = cfg.b1 * st.m + (1 - cfg.b1) * gt
+    v = cfg.b2 * st.v + (1 - cfg.b2) * gt * gt
+    if cfg.bias_correction:
+        c = count.astype(jnp.float32)
+        c1 = 1 - cfg.b1 ** c
+        c2 = 1 - cfg.b2 ** c
+    else:
+        c1 = c2 = 1.0
+    ut = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+    u = proj.project_back(ut, st.basis, side)
+    return u, GaloreBlockState(basis=st.basis, m=m, v=v)
+
+
+def _dense_update(cfg: GaloreConfig, g, st: DenseMoments, count):
+    g32 = g.astype(jnp.float32)
+    m = cfg.b1 * st.m + (1 - cfg.b1) * g32
+    v = cfg.b2 * st.v + (1 - cfg.b2) * g32 * g32
+    if cfg.bias_correction:
+        c = count.astype(jnp.float32)
+        c1 = 1 - cfg.b1 ** c
+        c2 = 1 - cfg.b2 ** c
+    else:
+        c1 = c2 = 1.0
+    u = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+    return u, DenseMoments(m=m, v=v)
+
+
+def scale_by_galore(cfg: GaloreConfig,
+                    target_fn: Callable = default_target_fn,
+                    seed: int = 0) -> GradientTransformation:
+    """GaLore preconditioning as a GradientTransformation (chain with weight
+    decay + lr like AdamW)."""
+
+    def init(params):
+        return galore_init(cfg, params, target_fn, seed)
+
+    def update(grads, state, params=None):
+        del params
+        count = state.count + 1
+        refresh_idx = state.count // cfg.refresh_every
+        do_refresh = (state.count % cfg.refresh_every) == 0
+
+        leaves = jax.tree_util.tree_flatten_with_path(grads)[0]
+        treedef = jax.tree_util.tree_structure(grads)
+        blk_leaves = jax.tree_util.tree_leaves(
+            state.blocks, is_leaf=lambda x: isinstance(x, (GaloreBlockState,
+                                                           DenseMoments)))
+        updates, new_blocks = [], []
+        for block_id, ((path, g), st) in enumerate(zip(leaves, blk_leaves)):
+            if isinstance(st, GaloreBlockState):
+                u, nst = _block_update(cfg, g, st, count, refresh_idx,
+                                       do_refresh, state.seed, block_id)
+            else:
+                u, nst = _dense_update(cfg, g, st, count)
+            updates.append(u)
+            new_blocks.append(nst)
+        return (jax.tree_util.tree_unflatten(treedef, updates),
+                GaloreState(count=count, seed=state.seed,
+                            blocks=jax.tree_util.tree_unflatten(treedef, new_blocks)))
+
+    return GradientTransformation(init, update)
+
+
+def galore_adamw(cfg: GaloreConfig, learning_rate, weight_decay: float = 0.01,
+                 target_fn: Callable = default_target_fn, seed: int = 0,
+                 clip_norm: Optional[float] = None) -> GradientTransformation:
+    from ..optim.base import chain, clip_by_global_norm, scale_by_learning_rate
+    from ..optim.adamw import add_decayed_weights
+    txs = []
+    if clip_norm is not None:
+        txs.append(clip_by_global_norm(clip_norm))
+    txs += [scale_by_galore(cfg, target_fn, seed),
+            add_decayed_weights(weight_decay),
+            scale_by_learning_rate(learning_rate)]
+    return chain(*txs)
+
+
+def manual_refresh(cfg: GaloreConfig, state: GaloreState, refresh_idx,
+                   grads: Optional[PyTree] = None) -> GaloreState:
+    """Refresh every block basis *now* (round-boundary refresh used by the
+    federated engine; the in-step ``count % τ`` path is used by the compiled
+    production train step).
+
+    Data-driven (RSVD/SVD of ``grads``) when ``grads`` is given and
+    ``refresh_idx < adaptive_steps``; seeded-random otherwise.
+    """
+    # Called at round boundaries with a *concrete* refresh index (the round
+    # number) — the adaptive-vs-random decision is made at trace time.
+    refresh_idx_int = int(refresh_idx)
+    refresh_idx = jnp.asarray(refresh_idx_int, jnp.uint32)
+    grads_leaves = None
+    if grads is not None:
+        grads_leaves = jax.tree_util.tree_leaves(grads)
+
+    blk_leaves, treedef = jax.tree_util.tree_flatten(
+        state.blocks, is_leaf=lambda x: isinstance(x, (GaloreBlockState,
+                                                       DenseMoments)))
+    adaptive = (grads is not None and cfg.refresh_mode != "random"
+                and refresh_idx_int < cfg.adaptive_steps)
+    out = []
+    for block_id, st in enumerate(blk_leaves):
+        if not isinstance(st, GaloreBlockState):
+            out.append(st)
+            continue
+        rank = st.basis.shape[-1]
+        # Projected buffers are (rows, r) for right-side blocks and (r, cols)
+        # for left-side blocks (Appendix A.1 shape summary).
+        side = proj.RIGHT if st.m.shape[-1] == rank else proj.LEFT
+        keys = _block_keys(state.seed, refresh_idx, block_id,
+                           st.basis.shape[:-2])
+        if adaptive:
+            g32 = grads_leaves[block_id].astype(jnp.float32)
+            if cfg.use_exact_svd:
+                new_basis = proj.svd_basis_nd(g32, rank, side)
+            else:
+                new_basis = proj.rsvd_basis_nd(g32, rank, side, keys,
+                                               cfg.oversample)
+        else:
+            new_basis = proj.random_basis_nd(keys, st.basis.shape[-2], rank)
+        m = proj.reproject(st.m, st.basis, new_basis, side)
+        v = jnp.maximum(proj.reproject(st.v, st.basis, new_basis, side), 0.0)
+        out.append(GaloreBlockState(basis=new_basis, m=m, v=v))
+    return GaloreState(count=state.count, seed=state.seed,
+                       blocks=jax.tree_util.tree_unflatten(treedef, out))
+
+
+# ------------------------------------------------- fed-layer state access ---
+
+def galore_state_of(opt_state) -> GaloreState:
+    """Find the GaloreState inside a chained optimizer state."""
+    if isinstance(opt_state, GaloreState):
+        return opt_state
+    for s in opt_state:
+        if isinstance(s, GaloreState):
+            return s
+    raise ValueError("no GaloreState in optimizer state")
+
+
+def replace_galore_state(opt_state, new: GaloreState):
+    if isinstance(opt_state, GaloreState):
+        return new
+    return tuple(new if isinstance(s, GaloreState) else s for s in opt_state)
+
+
+def extract_projected_v(state: GaloreState) -> PyTree:
+    """The per-block projected second moments ṽ — the client uplink payload."""
+    def pick(st):
+        return st.v if isinstance(st, GaloreBlockState) else None
+    return jax.tree_util.tree_map(
+        pick, state.blocks,
+        is_leaf=lambda x: isinstance(x, (GaloreBlockState, DenseMoments)))
+
+
+def extract_bases(state: GaloreState) -> PyTree:
+    def pick(st):
+        return st.basis if isinstance(st, GaloreBlockState) else None
+    return jax.tree_util.tree_map(
+        pick, state.blocks,
+        is_leaf=lambda x: isinstance(x, (GaloreBlockState, DenseMoments)))
+
+
+def with_projected_v(state: GaloreState, new_v: PyTree) -> GaloreState:
+    """Install server-synchronized ṽ (next-round initialization, Alg. 1 l.13)."""
+    def put(st, nv):
+        if isinstance(st, GaloreBlockState) and nv is not None:
+            return GaloreBlockState(basis=st.basis, m=st.m,
+                                    v=jnp.maximum(nv.astype(jnp.float32), 0.0))
+        return st
+    blocks = jax.tree_util.tree_map(
+        put, state.blocks, new_v,
+        is_leaf=lambda x: isinstance(x, (GaloreBlockState, DenseMoments)))
+    return GaloreState(count=state.count, seed=state.seed, blocks=blocks)
+
+
+def with_seed(state: GaloreState, seed) -> GaloreState:
+    return GaloreState(count=state.count,
+                       seed=jnp.asarray(seed, jnp.uint32), blocks=state.blocks)

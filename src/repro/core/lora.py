@@ -1,0 +1,90 @@
+"""LoRA parameterization and factor algebra (paper §4.1 + baselines).
+
+A LoRA-adapted block is ``W = W0 + (alpha/r) * B A`` with ``A ∈ R^{r×n}``
+(Gaussian init) and ``B ∈ R^{m×r}`` (zero init). The federated baselines
+differ in which factors train and how they aggregate:
+
+  FedIT      — avg A and B separately:  ΔW̄ = (Σ p̃ᵢ Bᵢ)(Σ p̃ᵢ Aᵢ)   (rank ≤ r)
+  FFA-LoRA   — A frozen at A0:          ΔW̄ = (Σ p̃ᵢ Bᵢ) A0          (rank ≤ r)
+  LoRA-Fair  — factor avg + server refinement toward the mean lift
+  FLoRA      — lift:                    ΔW̄ = Σ p̃ᵢ Bᵢ Aᵢ            (rank ≤ Kr)
+  FR-LoRA    — lift + residual carry-over into re-initialized factors
+
+The rank-tail diagnostic (Eq. 10) measures the off-manifold component
+``dist_F(ΔW̄, M_{≤r}) = sqrt(Σ_{j>r} σ_j²)`` that drives update-space mismatch.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class LoraPair(NamedTuple):
+    a: jnp.ndarray   # (r, n)
+    b: jnp.ndarray   # (m, r)
+
+
+def lora_init(key: jax.Array, shape, rank: int, dtype=jnp.float32,
+              a_std: float = 0.02) -> LoraPair:
+    m, n = shape
+    a = a_std * jax.random.normal(key, (rank, n), dtype)
+    b = jnp.zeros((m, rank), dtype)
+    return LoraPair(a=a, b=b)
+
+
+def lora_delta(pair: LoraPair, scale: float = 1.0) -> jnp.ndarray:
+    return scale * (pair.b @ pair.a)
+
+
+def is_lora_pair(x) -> bool:
+    return isinstance(x, LoraPair)
+
+
+def tree_lora_init(key: jax.Array, params: PyTree, target_fn, rank: int,
+                   dtype=jnp.float32) -> PyTree:
+    """LoraPair for each 2-D target leaf, None elsewhere."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    out = []
+    for i, (path, p) in enumerate(leaves):
+        pstr = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in path)
+        if p.ndim == 2 and target_fn(pstr, p):
+            out.append(lora_init(jax.random.fold_in(key, i), p.shape,
+                                 min(rank, min(p.shape)), dtype))
+        else:
+            out.append(None)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def apply_lora(params: PyTree, adapters: PyTree, scale: float = 1.0) -> PyTree:
+    """Effective weights W0 + scale·BA (None adapters pass through)."""
+    def merge(p, ad):
+        if ad is None:
+            return p
+        return p + lora_delta(ad, scale).astype(p.dtype)
+    return jax.tree_util.tree_map(merge, params, adapters, is_leaf=is_lora_pair)
+
+
+# --------------------------------------------------------------- metrics ----
+
+def rank_tail_energy(delta_w: jnp.ndarray, rank: int) -> jnp.ndarray:
+    """Eckart–Young distance to the rank-≤r manifold (Eq. 10)."""
+    s = jnp.linalg.svd(delta_w, compute_uv=False)
+    return jnp.sqrt(jnp.sum(s[rank:] ** 2))
+
+
+def effective_rank(delta_w: jnp.ndarray, tol: float = 1e-6) -> jnp.ndarray:
+    s = jnp.linalg.svd(delta_w, compute_uv=False)
+    return jnp.sum(s > tol * s[0])
+
+
+def svd_truncate(delta_w: jnp.ndarray, rank: int) -> LoraPair:
+    """Re-factorize a dense delta to rank-r LoRA factors (used by FR-LoRA and
+    post-hoc SVD baselines)."""
+    u, s, vt = jnp.linalg.svd(delta_w, full_matrices=False)
+    sq = jnp.sqrt(s[:rank])
+    return LoraPair(a=sq[:, None] * vt[:rank], b=u[:, :rank] * sq[None, :])

@@ -1,0 +1,172 @@
+"""Rank-r gradient projectors for GaLore-style subspace optimization.
+
+Implements the paper's Appendix A.1 conventions:
+
+* ``proj_type=std`` side rule — for a block ``W ∈ R^{m×n}``: if ``m >= n`` use a
+  RIGHT basis ``B ∈ R^{n×r}`` (orthonormal columns; the paper's ``P = Bᵀ``) and
+  project ``g̃ = g B ∈ R^{m×r}``; if ``m < n`` use a LEFT basis ``B ∈ R^{m×r}``
+  and ``g̃ = Bᵀ g ∈ R^{r×n}``.
+* Data-driven bases: exact SVD or randomized SVD (RSVD — two tall GEMMs + a
+  small SVD; MXU-friendly, the TPU-native choice).
+* Seeded random orthonormal bases: fully determined by an integer seed, so in
+  the random-adaptive phase the server broadcasts only ``s_k`` (Appendix D).
+* Low-rank change-of-basis reprojection ``X ← X (B_oldᵀ B_new)`` used when the
+  projector refreshes, which never materialises a dense ``m×n`` buffer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+RIGHT = "right"
+LEFT = "left"
+
+
+def proj_side(shape) -> str:
+    """GaLore ``proj_type=std``: right basis iff m >= n (square ⇒ right).
+
+    Shapes may carry leading batch dims (stacked scan blocks) — only the
+    trailing two matter.
+    """
+    if len(shape) < 2:
+        raise ValueError(f"projector requires a ≥2-D block, got {shape}")
+    m, n = shape[-2:]
+    return RIGHT if m >= n else LEFT
+
+
+def basis_dim(shape) -> int:
+    """The ambient dimension the basis lives in (n for right, m for left)."""
+    m, n = shape[-2:]
+    return n if proj_side(shape) == RIGHT else m
+
+
+def project(g: jnp.ndarray, basis: jnp.ndarray, side: str) -> jnp.ndarray:
+    """g (..., m, n), basis (..., dim, r) -> (..., m, r) or (..., r, n)."""
+    if side == RIGHT:
+        return jnp.einsum("...mn,...nr->...mr", g, basis)
+    return jnp.einsum("...mr,...mn->...rn", basis, g)
+
+
+def project_back(u: jnp.ndarray, basis: jnp.ndarray, side: str) -> jnp.ndarray:
+    """Projected update back to ambient shape."""
+    if side == RIGHT:
+        return jnp.einsum("...mr,...nr->...mn", u, basis)
+    return jnp.einsum("...mr,...rn->...mn", basis, u)
+
+
+def reproject(buf: jnp.ndarray, old_basis: jnp.ndarray, new_basis: jnp.ndarray,
+              side: str) -> jnp.ndarray:
+    """Change-of-basis for projected optimizer buffers (Appendix A.1).
+
+    Right: buf (m,r) ← buf @ (B_oldᵀ B_new);  Left: buf (r,n) ← (B_newᵀ B_old) buf.
+    The r×r transfer matrix keeps everything low-rank. Leading batch dims
+    (stacked scan blocks) broadcast through.
+    """
+    transfer = jnp.einsum("...dr,...ds->...rs", old_basis, new_basis)  # (r,r)
+    if side == RIGHT:
+        return jnp.einsum("...mr,...rs->...ms", buf, transfer)
+    return jnp.einsum("...rs,...rn->...sn", transfer, buf)
+
+
+# ---------------------------------------------------------------- bases ----
+
+def svd_basis(g: jnp.ndarray, rank: int, side: str) -> jnp.ndarray:
+    """Exact top-r singular basis of the gradient (GaLore's SVD refresh)."""
+    g32 = g.astype(jnp.float32)
+    u, _, vt = jnp.linalg.svd(g32, full_matrices=False)
+    if side == RIGHT:
+        return vt[:rank].T          # (n,r) right singular vectors
+    return u[:, :rank]              # (m,r) left singular vectors
+
+
+def rsvd_basis(g: jnp.ndarray, rank: int, side: str, key: jax.Array,
+               oversample: int = 8, power_iters: int = 1) -> jnp.ndarray:
+    """Randomized SVD basis — two tall GEMMs + a small QR/SVD (TPU-friendly)."""
+    g32 = g.astype(jnp.float32)
+    m, n = g32.shape
+    k = min(rank + oversample, min(m, n))
+    if side == LEFT:
+        g32 = g32.T                 # reduce to the right-basis problem on gᵀ
+        m, n = n, m
+    # Right basis of g32 == left basis of g32ᵀ: sketch the row space.
+    omega = jax.random.normal(key, (m, k), jnp.float32)
+    y = g32.T @ omega               # (n,k)
+    for _ in range(power_iters):
+        y = g32.T @ (g32 @ y)
+    q, _ = jnp.linalg.qr(y)         # (n,k) orthonormal
+    b = g32 @ q                     # (m,k)
+    _, _, vt = jnp.linalg.svd(b, full_matrices=False)   # (k,k)
+    basis = q @ vt[:rank].T         # (n,r)
+    return basis
+
+
+def random_basis(seed, dim: int, rank: int) -> jnp.ndarray:
+    """Seeded random orthonormal basis (dim,r): QR of a Gaussian sketch.
+
+    Deterministic in ``seed`` — this is what makes the server-broadcast-a-seed
+    protocol possible (only the integer travels, never the basis).
+    """
+    key = jax.random.PRNGKey(seed) if jnp.ndim(seed) == 0 and not isinstance(
+        seed, jax.Array) else (seed if isinstance(seed, jax.Array) and seed.shape == (2,)
+                               else jax.random.PRNGKey(seed))
+    gauss = jax.random.normal(key, (dim, rank), jnp.float32)
+    q, r = jnp.linalg.qr(gauss)
+    # Fix signs for full determinism across backends.
+    signs = jnp.sign(jnp.diagonal(r))
+    signs = jnp.where(signs == 0, 1.0, signs)
+    return q * signs[None, :]
+
+
+def seeded_block_key(seed: jnp.ndarray, refresh_idx: jnp.ndarray,
+                     block_id: int) -> jax.Array:
+    """Per-(round seed, refresh, block) key so blocks decorrelate but every
+    client reconstructs the identical basis from the broadcast seed."""
+    key = jax.random.PRNGKey(jnp.asarray(seed, jnp.uint32))
+    key = jax.random.fold_in(key, jnp.asarray(refresh_idx, jnp.uint32))
+    return jax.random.fold_in(key, block_id)
+
+
+# ------------------------------------------- stacked (scan-block) variants --
+
+def svd_basis_nd(g: jnp.ndarray, rank: int, side: str) -> jnp.ndarray:
+    """svd_basis vmapped over leading stacked-block dims."""
+    if g.ndim == 2:
+        return svd_basis(g, rank, side)
+    return jax.vmap(lambda gg: svd_basis_nd(gg, rank, side))(g)
+
+
+def rsvd_basis_nd(g: jnp.ndarray, rank: int, side: str, keys: jax.Array,
+                  oversample: int = 8) -> jnp.ndarray:
+    """rsvd_basis vmapped over a leading stacked-block dim; ``keys`` must have
+    one PRNG key per block row."""
+    if g.ndim == 2:
+        return rsvd_basis(g, rank, side, keys, oversample)
+    return jax.vmap(lambda gg, kk: rsvd_basis_nd(gg, rank, side, kk,
+                                                 oversample))(g, keys)
+
+
+def random_basis_nd(keys: jax.Array, dim: int, rank: int) -> jnp.ndarray:
+    """Seeded random bases: keys (..., 2) -> (..., dim, rank)."""
+    if keys.ndim == 1:
+        return random_basis(keys, dim, rank)
+    return jax.vmap(lambda kk: random_basis_nd(kk, dim, rank))(keys)
+
+
+def stacked_keys(base_key: jax.Array, n: int) -> jax.Array:
+    """Per-layer keys derived from a shared base key (deterministic)."""
+    return jax.vmap(lambda i: jax.random.fold_in(base_key, i))(jnp.arange(n))
+
+
+class ProjectorSchedule(NamedTuple):
+    """SVD->random schedule (Appendix D): data-driven bases for the first
+    ``adaptive_steps`` refreshes, seeded random thereafter."""
+    refresh_every: int            # tau
+    adaptive_steps: int           # S: number of data-driven refreshes
+    rank: int
+    oversample: int = 8
+    use_exact_svd: bool = False   # exact SVD vs RSVD in the adaptive phase
+
+    def is_adaptive(self, refresh_idx) -> jnp.ndarray:
+        return jnp.asarray(refresh_idx) < self.adaptive_steps

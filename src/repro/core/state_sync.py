@@ -1,0 +1,89 @@
+"""State synchronization protocols 𝒮 (Definition 3.3 + Algorithm 1 line 12).
+
+Inputs are *stacked* per-client projected second moments ṽ (leading client
+axis) plus the shared per-round basis R_k reconstructed from the broadcast
+seed. Protocols:
+
+  none      — clients reinitialize adaptive states each round (most fed-LoRA).
+  avg       — naive weighted averaging of ṽ (the FedOpt-style baseline that
+              Appendix F shows is biased by squared drift).
+  avg_svd   — naive average followed by rank-r SVD re-projection.
+  ajive     — the paper's protocol: lift views V^i = ṽ^i R_kᵀ, extract the
+              joint component via AJIVE (joint rank = r), broadcast.
+
+All return the *lifted* (n, n_cols) synchronized state; the caller re-projects
+onto each client's next-round basis (InitState, Eq. 5).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .ajive import ajive_sync
+from . import projector as proj
+
+PyTree = Any
+
+
+def lift_views(v_stack: jnp.ndarray, basis: jnp.ndarray, side: str) -> jnp.ndarray:
+    """ṽ (K, m, r) + basis (n, r) -> views (K, m, n) [right side]; left is
+    (K, r, n) + (m, r) -> (K, m, n)."""
+    if side == proj.RIGHT:
+        return jnp.einsum("kmr,nr->kmn", v_stack, basis)
+    return jnp.einsum("mr,krn->kmn", basis, v_stack)
+
+
+def project_state(lifted: jnp.ndarray, basis: jnp.ndarray, side: str) -> jnp.ndarray:
+    """Re-project a lifted (m, n) state onto a (possibly new) basis."""
+    if side == proj.RIGHT:
+        return lifted @ basis                  # (m,n)@(n,r) -> (m,r)
+    return basis.T @ lifted                    # (r,m)@(m,n) -> (r,n)
+
+
+def sync_none(v_stack, basis, side, weights=None, rank: Optional[int] = None):
+    return None
+
+
+def sync_avg(v_stack, basis, side, weights=None, rank: Optional[int] = None):
+    k = v_stack.shape[0]
+    w = (jnp.full((k,), 1.0 / k) if weights is None
+         else jnp.asarray(weights, jnp.float32) / jnp.sum(weights))
+    views = lift_views(v_stack.astype(jnp.float32), basis, side)
+    return jnp.einsum("k,kmn->mn", w, views)
+
+
+def sync_avg_svd(v_stack, basis, side, weights=None, rank: Optional[int] = None):
+    avg = sync_avg(v_stack, basis, side, weights)
+    r = rank if rank is not None else basis.shape[1]
+    u, s, vt = jnp.linalg.svd(avg, full_matrices=False)
+    return (u[:, :r] * s[:r][None, :]) @ vt[:r]
+
+
+def sync_ajive(v_stack, basis, side, weights=None, rank: Optional[int] = None):
+    """The paper's 𝒮: spectral shared-signal extraction across client views."""
+    r = rank if rank is not None else basis.shape[1]
+    views = lift_views(v_stack.astype(jnp.float32), basis, side)
+    w = None if weights is None else jnp.asarray(weights, jnp.float32)
+    return ajive_sync(views, rank=r, weights=w)
+
+
+SYNC_PROTOCOLS = {
+    "none": sync_none,
+    "avg": sync_avg,
+    "avg_svd": sync_avg_svd,
+    "ajive": sync_ajive,
+}
+
+
+def sync_block(protocol: str, v_stack: jnp.ndarray, old_basis: jnp.ndarray,
+               new_basis: jnp.ndarray, side: str, weights=None,
+               rank: Optional[int] = None) -> Optional[jnp.ndarray]:
+    """One adapted block end-to-end: lift with the round-k basis, synchronize,
+    re-project onto the round-(k+1) basis. Returns the next-round ṽ init, or
+    None for protocol='none' (clients zero-init)."""
+    lifted = SYNC_PROTOCOLS[protocol](v_stack, old_basis, side, weights, rank)
+    if lifted is None:
+        return None
+    return jnp.maximum(project_state(lifted, new_basis, side), 0.0)

@@ -1,0 +1,11 @@
+from .partition import (dirichlet_label_partition, heterogeneity_stats,
+                        iid_partition)
+from .pipeline import FederatedBatcher
+from .synthetic import (TaskData, accuracy_from_logits, markov_lm,
+                        patch_classification, seq_classification)
+
+__all__ = [
+    "dirichlet_label_partition", "heterogeneity_stats", "iid_partition",
+    "FederatedBatcher", "TaskData", "accuracy_from_logits", "markov_lm",
+    "patch_classification", "seq_classification",
+]

@@ -1,0 +1,3 @@
+from .runtime import ShardedFederation
+
+__all__ = ["ShardedFederation"]

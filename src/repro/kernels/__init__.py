@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the compute hot-spots (DESIGN.md §3):
+
+* ``galore_adamw`` — the paper's optimizer step, fused project → moment
+  update → precondition → project-back in one VMEM-resident pass.
+* ``flash_attention`` — blockwise GQA attention (train/prefill hot-spot).
+* ``rwkv6_scan`` — chunked WKV recurrence with VMEM-persistent state.
+
+``ops`` holds the jit'd public wrappers (interpret=True on CPU); ``ref``
+holds the pure-jnp oracles the tests assert against.
+"""
+from . import ops, ref
+from .ops import flash_attention, galore_adamw_step, rwkv6_scan
+
+__all__ = ["ops", "ref", "flash_attention", "galore_adamw_step", "rwkv6_scan"]

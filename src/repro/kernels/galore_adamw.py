@@ -1,0 +1,92 @@
+"""Fused GaLoreAdamW Pallas TPU kernel.
+
+On GPU, GaLore is three GEMMs + elementwise ops with HBM round-trips between
+them (project -> Adam update -> project-back -> weight update). This kernel
+fuses the whole optimizer step for one weight block into a single VMEM-
+resident pass, tiled over rows of the block:
+
+  per row-tile i (bm × N):
+    g̃  = g_i @ B            (MXU;  B (N, r) stays resident across the grid)
+    m̃  = β₁ m̃ + (1-β₁) g̃     (VPU)
+    ṽ  = β₂ ṽ + (1-β₂) g̃²    (VPU)
+    ũ  = m̂ / (√v̂ + ε)        (VPU, bias-corrected)
+    u  = ũ @ Bᵀ              (MXU)
+    w_i ← w_i − η u − η λ w_i
+
+HBM traffic: read w, g once; write w once; m̃/ṽ are O(M·r) — the dense (M, N)
+gradient never round-trips between optimizer stages. Tile sizes are MXU/VPU
+aligned (bm multiple of 8, N and r padded to 128 by the caller when needed).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _galore_kernel(count_ref, w_ref, g_ref, basis_ref, m_ref, v_ref,
+                   w_out, m_out, v_out, *, b1, b2, eps, lr, weight_decay):
+    g = g_ref[...].astype(jnp.float32)            # (bm, N)
+    basis = basis_ref[...].astype(jnp.float32)    # (N, r)
+    gt = jnp.dot(g, basis, preferred_element_type=jnp.float32)   # (bm, r)
+
+    m = b1 * m_ref[...] + (1.0 - b1) * gt
+    v = b2 * v_ref[...] + (1.0 - b2) * gt * gt
+
+    c = count_ref[0, 0]
+    c1 = 1.0 - b1 ** c
+    c2 = 1.0 - b2 ** c
+    ut = (m / c1) / (jnp.sqrt(v / c2) + eps)      # (bm, r)
+
+    u = jnp.dot(ut, basis.T, preferred_element_type=jnp.float32)  # (bm, N)
+    w = w_ref[...].astype(jnp.float32)
+    w_out[...] = (w - lr * u - lr * weight_decay * w).astype(w_out.dtype)
+    m_out[...] = m
+    v_out[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "lr",
+                                             "weight_decay", "block_rows",
+                                             "interpret"))
+def galore_adamw_step(w, g, basis, m, v, count, *, b1=0.9, b2=0.999,
+                      eps=1e-8, lr=1e-3, weight_decay=0.0,
+                      block_rows=128, interpret=False):
+    """One fused step for a right-projected block.
+
+    w, g (M, N); basis (N, r); m, v (M, r) fp32; count scalar (post-increment
+    step for bias correction). Returns (w_new, m_new, v_new).
+    """
+    mm, nn = w.shape
+    r = basis.shape[1]
+    bm = min(block_rows, mm)
+    assert mm % bm == 0, f"M={mm} must divide block_rows={bm}"
+    grid = (mm // bm,)
+
+    count_arr = jnp.full((1, 1), count, jnp.float32)
+    kernel = functools.partial(_galore_kernel, b1=b1, b2=b2, eps=eps, lr=lr,
+                               weight_decay=weight_decay)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),        # count (SMEM-like)
+            pl.BlockSpec((bm, nn), lambda i: (i, 0)),      # w tile
+            pl.BlockSpec((bm, nn), lambda i: (i, 0)),      # g tile
+            pl.BlockSpec((nn, r), lambda i: (0, 0)),       # basis (resident)
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),       # m tile
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),       # v tile
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, nn), lambda i: (i, 0)),
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, nn), w.dtype),
+            jax.ShapeDtypeStruct((mm, r), jnp.float32),
+            jax.ShapeDtypeStruct((mm, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(count_arr, w, g, basis, m, v)

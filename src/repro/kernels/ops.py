@@ -1,0 +1,32 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On the CPU container the kernels run in ``interpret=True`` mode (the kernel
+body executes as traced Python — correctness only); on a real TPU backend
+they compile to Mosaic. ``interpret`` is auto-detected from the backend.
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .galore_adamw import galore_adamw_step as _galore
+from .rwkv6_scan import rwkv6_scan as _rwkv6
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    block_q=128, block_k=128):
+    return _flash(q, k, v, causal=causal, window=window, scale=scale,
+                  block_q=block_q, block_k=block_k, interpret=_interpret())
+
+
+def galore_adamw_step(w, g, basis, m, v, count, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _galore(w, g, basis, m, v, count, **kw)
+
+
+def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk=128):
+    return _rwkv6(r, k, v, w, u, s0, chunk=chunk, interpret=_interpret())

@@ -1,0 +1,11 @@
+from .mesh import TPU_V5E, make_host_mesh, make_production_mesh
+from .steps import (TrainSpec, galore_target_fn, init_train_state,
+                    make_decode_step, make_fed_local_step,
+                    make_fed_round_step, make_galore_tx, make_prefill_step)
+
+__all__ = [
+    "TPU_V5E", "make_host_mesh", "make_production_mesh", "TrainSpec",
+    "galore_target_fn", "init_train_state", "make_decode_step",
+    "make_fed_local_step", "make_fed_round_step", "make_galore_tx",
+    "make_prefill_step",
+]

@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill a batch of prompts, decode greedily.
+
+Serves the (possibly fine-tuned) global model — the inference side of the
+input-shape matrix (prefill_32k / decode_32k / long_500k lower these exact
+step functions on the production mesh; here they run host-scale).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b --smoke \
+      --batch 4 --prompt-len 32 --new-tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, smoke_variant
+from ..models import model as model_lib
+
+
+def generate(params, cfg, prompts, new_tokens: int, cache_len: int,
+             temperature: float = 0.0, key=None):
+    """prompts (B, L) -> (B, L + new_tokens). Greedy when temperature == 0."""
+    b = prompts.shape[0]
+    state = model_lib.init_decode_state(cfg, b, cache_len)
+    logits, state = model_lib.prefill(params, cfg, prompts, state)
+
+    def sample(lg, k):
+        if temperature <= 0:
+            return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(k, lg / temperature).astype(jnp.int32)
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    tok = sample(logits, key)
+    out = [tok]
+
+    step = jax.jit(lambda p, t, s: model_lib.decode_step(p, cfg, t, s))
+    for i in range(new_tokens - 1):
+        key, sub = jax.random.split(key)
+        logits, state = step(params, tok, state)
+        tok = sample(logits, sub)
+        out.append(tok)
+    return jnp.concatenate([prompts, jnp.stack(out, axis=1)], axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-1.6b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=0,
+                    help="KV slots (0 = prompt+new)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = model_lib.init_params(key, cfg)
+    prompts = jax.random.randint(jax.random.fold_in(key, 1),
+                                 (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    cache = args.cache_len or (args.prompt_len + args.new_tokens)
+
+    t0 = time.time()
+    out = generate(params, cfg, prompts, args.new_tokens, cache,
+                   args.temperature, key)
+    dt = time.time() - t0
+    tput = args.batch * args.new_tokens / dt
+    print(json.dumps({"arch": cfg.name, "batch": args.batch,
+                      "prompt_len": args.prompt_len,
+                      "new_tokens": args.new_tokens,
+                      "sec": round(dt, 2),
+                      "tokens_per_sec": round(tput, 1),
+                      "sample_row": out[0, -args.new_tokens:].tolist()}))
+
+
+if __name__ == "__main__":
+    main()

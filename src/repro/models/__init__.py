@@ -1,0 +1,9 @@
+from . import attention, frontend, layers, mamba, model, moe, rwkv
+from .model import (DecodeState, decode_step, forward, init_decode_state,
+                    init_params, loss_fn, prefill)
+
+__all__ = [
+    "attention", "frontend", "layers", "mamba", "model", "moe", "rwkv",
+    "DecodeState", "decode_step", "forward", "init_decode_state",
+    "init_params", "loss_fn", "prefill",
+]

@@ -1,0 +1,163 @@
+"""Shared building blocks: norms, activations, MLPs, embeddings, RoPE."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+import contextlib
+
+_BATCH_AXES_OVERRIDE = [None]   # None = use (pod, data) from the mesh
+
+
+@contextlib.contextmanager
+def batch_axes_override(axes):
+    """Override (or disable, with ()) what 'batch' resolves to in constrain().
+
+    The federated train step vmaps clients with ``spmd_axis_name`` pinning
+    the CLIENT dim to the data axes; inner per-client batch constraints must
+    then be disabled or they would claim the same mesh axes twice.
+    """
+    _BATCH_AXES_OVERRIDE.append(axes)
+    try:
+        yield
+    finally:
+        _BATCH_AXES_OVERRIDE.pop()
+
+
+def constrain(x: jnp.ndarray, *spec):
+    """Best-effort sharding constraint: 'batch' resolves to whichever of
+    (pod, data) exist on the ambient mesh; 'model' must exist; no-op when
+    tracing without a mesh (host-scale runs) or when a dim doesn't divide.
+
+    These hints pin the batch dimension of attention intermediates — without
+    them SPMD can replicate the (L, L) score tensors across the data axis
+    (§Perf iteration B measured a 16× bytes regression from exactly that).
+    """
+    from jax.sharding import PartitionSpec
+    try:
+        from jax._src.mesh import thread_resources
+        mesh = thread_resources.env.physical_mesh
+        if mesh.empty:
+            return x
+        axis_names = mesh.axis_names
+    except Exception:  # noqa: BLE001
+        return x
+    if "model" not in axis_names:
+        return x
+    if _BATCH_AXES_OVERRIDE[-1] is not None:
+        batch_axes = tuple(_BATCH_AXES_OVERRIDE[-1])
+    else:
+        batch_axes = tuple(n for n in ("pod", "data") if n in axis_names)
+    sizes = dict(mesh.shape)
+    resolved = []
+    for dim, s in zip(x.shape, spec):
+        if s == "batch":
+            s = batch_axes if batch_axes else None
+        if s is not None:
+            names = (s,) if isinstance(s, str) else tuple(s)
+            total = 1
+            for nm in names:
+                total *= sizes[nm]
+            if dim % total != 0:
+                s = None
+        resolved.append(s)
+    try:
+        return jax.lax.with_sharding_constraint(x, PartitionSpec(*resolved))
+    except Exception:  # noqa: BLE001
+        return x
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    out = out * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def apply_norm(x, p, kind: str):
+    if kind == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+def norm_init(d: int, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+}
+
+
+def glu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, (d_model, d_ff), dtype=dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), dtype=dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), dtype=dtype)}
+
+
+def glu_mlp(p, x, act: str = "silu"):
+    """Gated MLP (SwiGLU family) — llama/mistral/command-r style."""
+    gate = ACTS[act](x @ p["w_gate"])
+    return (gate * (x @ p["w_up"])) @ p["w_down"]
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"w_up": dense_init(k1, (d_model, d_ff), dtype=dtype),
+            "w_down": dense_init(k2, (d_ff, d_model), dtype=dtype)}
+
+
+def mlp(p, x, act: str = "gelu"):
+    """Plain 2-layer MLP (starcoder2 / musicgen style)."""
+    return ACTS[act](x @ p["w_up"]) @ p["w_down"]
+
+
+# ------------------------------------------------------------------ RoPE ----
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq) absolute."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                 # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = x32[..., : hd // 2], x32[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jnp.ndarray, d_model: int) -> jnp.ndarray:
+    """Any-length sinusoidal embeddings (musicgen — no learned table)."""
+    half = d_model // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)

@@ -1,0 +1,140 @@
+"""Mamba (selective SSM) layer — the recurrent half of Jamba's 1:7 interleave.
+
+Selective scan: h_t = exp(Δ_t ⊙ A) h_{t-1} + (Δ_t ⊙ x_t) B_tᵀ ;  y_t = h_t C_t + D x_t.
+Train/prefill run a `lax.scan` over time carrying (B, d_inner, d_state) —
+no (L, d_inner, d_state) tensor is ever materialized (VMEM-friendly; a
+chunked Pallas kernel is the §Perf upgrade path). Decode carries the SSM
+state plus a (d_conv-1)-tap shift register for the causal depthwise conv.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def mamba_dims(d_model: int, expand: int = 2, d_state: int = 16,
+               d_conv: int = 4):
+    d_inner = expand * d_model
+    dt_rank = max(1, math.ceil(d_model / 16))
+    return d_inner, dt_rank, d_state, d_conv
+
+
+def mamba_init(key, d_model: int, *, expand: int = 2, d_state: int = 16,
+               d_conv: int = 4, dtype=jnp.float32):
+    d_inner, dt_rank, d_state, d_conv = mamba_dims(d_model, expand, d_state, d_conv)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d_model, 2 * d_inner), dtype=dtype),
+        "conv_w": dense_init(ks[1], (d_conv, d_inner), scale=0.1, dtype=dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], (d_inner, dt_rank + 2 * d_state), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_inner), dtype=dtype),
+        "dt_bias": jnp.zeros((d_inner,), jnp.float32),
+        "a_log": jnp.log(a),                       # (d_inner, d_state) fp32
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_inner, d_model), dtype=dtype),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jnp.ndarray   # (B, d_conv-1, d_inner) last inputs
+    h: jnp.ndarray      # (B, d_inner, d_state) fp32 SSM state
+
+
+def mamba_state_init(batch: int, d_model: int, *, expand: int = 2,
+                     d_state: int = 16, d_conv: int = 4,
+                     dtype=jnp.bfloat16) -> MambaState:
+    d_inner, _, d_state, d_conv = mamba_dims(d_model, expand, d_state, d_conv)
+    return MambaState(conv=jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+                      h=jnp.zeros((batch, d_inner, d_state), jnp.float32))
+
+
+def _causal_depthwise_conv(x, w, b, init_taps=None):
+    """x (B, L, C), w (K, C): causal depthwise conv along L."""
+    k = w.shape[0]
+    if init_taps is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = init_taps.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, L+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return out + b[None, None, :]
+
+
+def _ssm_params(p, xc, dt_rank, d_state):
+    """xc (..., d_inner) -> Δ (..., d_inner), B (..., d_state), C (..., d_state)."""
+    proj = xc @ p["x_proj"]
+    dt, b, c = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)
+    return delta, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def mamba_forward(p, x, state: MambaState = None, *, d_model: int,
+                  expand: int = 2, d_state: int = 16, d_conv: int = 4,
+                  return_state: bool = False):
+    """x (B, L, D) -> (B, L, D) [, final MambaState]."""
+    d_inner, dt_rank, d_state, d_conv = mamba_dims(d_model, expand, d_state, d_conv)
+    b_, l, _ = x.shape
+    xz = x @ p["in_proj"]
+    xc, z = jnp.split(xz, 2, axis=-1)
+    init_taps = None if state is None else state.conv
+    xc = jax.nn.silu(_causal_depthwise_conv(xc, p["conv_w"], p["conv_b"],
+                                            init_taps))
+    delta, bmat, cmat = _ssm_params(p, xc, dt_rank, d_state)
+    a = -jnp.exp(p["a_log"])                        # (d_inner, d_state)
+
+    h0 = (jnp.zeros((b_, d_inner, d_state), jnp.float32)
+          if state is None else state.h)
+
+    def step(h, inp):
+        xc_t, d_t, b_t, c_t = inp                  # (B,di) (B,di) (B,ds) (B,ds)
+        da = jnp.exp(d_t[..., None] * a[None])      # (B, di, ds)
+        dbx = (d_t * xc_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+        h = da * h + dbx
+        y = jnp.einsum("bds,bs->bd", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(delta, 1, 0),
+          jnp.moveaxis(bmat, 1, 0), jnp.moveaxis(cmat, 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                      # (B, L, d_inner)
+    y = y + p["d_skip"][None, None, :] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["out_proj"]
+    if return_state:
+        taps = jnp.concatenate([init_taps if init_taps is not None
+                                else jnp.zeros((b_, d_conv - 1, d_inner), x.dtype),
+                                xz[..., :d_inner]], axis=1)[:, -(d_conv - 1):, :]
+        return out, MambaState(conv=taps.astype(jnp.bfloat16), h=h_final)
+    return out
+
+
+def mamba_decode(p, x, state: MambaState, *, d_model: int, expand: int = 2,
+                 d_state: int = 16, d_conv: int = 4):
+    """One-token decode. x (B, 1, D)."""
+    d_inner, dt_rank, d_state, d_conv = mamba_dims(d_model, expand, d_state, d_conv)
+    b_ = x.shape[0]
+    xz = x[:, 0, :] @ p["in_proj"]                  # (B, 2*di)
+    xc_new, z = jnp.split(xz, 2, axis=-1)
+    taps = jnp.concatenate([state.conv.astype(xc_new.dtype),
+                            xc_new[:, None, :]], axis=1)   # (B, d_conv, di)
+    xc = jnp.einsum("bkc,kc->bc", taps, p["conv_w"]) + p["conv_b"]
+    xc = jax.nn.silu(xc)
+    delta, bmat, cmat = _ssm_params(p, xc, dt_rank, d_state)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(delta[..., None] * a[None])
+    h = da * state.h + (delta * xc.astype(jnp.float32))[..., None] * bmat[:, None, :]
+    y = jnp.einsum("bds,bs->bd", h, cmat)
+    y = y + p["d_skip"][None, :] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None, :]
+    new_state = MambaState(conv=taps[:, 1:, :].astype(state.conv.dtype), h=h)
+    return out, new_state

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts with TPU-native sort-based dispatch.
+
+Routing uses softmax-then-top-k with renormalization. Dispatch avoids
+all_to_all in the baseline implementation: assignments are sorted by expert,
+tokens are gathered into a dense (E, C, D) buffer (capacity-dropping), expert
+GLU MLPs run as one batched einsum over the expert axis — which shards
+naturally over the `model` mesh axis (expert parallelism) — and results
+scatter-add back weighted by the gates. Shared experts (DeepSeek-V2 style)
+run densely over all tokens.
+
+An auxiliary load-balance loss (mean fraction·prob product, Switch-style) is
+returned for the training objective.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ACTS, constrain, dense_init
+
+
+def moe_init(key, d_model: int, n_experts: int, d_ff: int,
+             n_shared: int = 0, shared_d_ff: Optional[int] = None,
+             dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    p = {"router": dense_init(ks[0], (d_model, n_experts), dtype=jnp.float32),
+         "w_gate": dense_init(ks[1], (n_experts, d_model, d_ff), dtype=dtype),
+         "w_up": dense_init(ks[2], (n_experts, d_model, d_ff), dtype=dtype),
+         "w_down": dense_init(ks[3], (n_experts, d_ff, d_model), dtype=dtype)}
+    if n_shared:
+        sdff = shared_d_ff or (n_shared * d_ff)
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {"w_gate": dense_init(kk[0], (d_model, sdff), dtype=dtype),
+                       "w_up": dense_init(kk[1], (d_model, sdff), dtype=dtype),
+                       "w_down": dense_init(kk[2], (sdff, d_model), dtype=dtype)}
+    return p
+
+
+def capacity(n_tokens: int, n_experts: int, k: int,
+             capacity_factor: float = 1.25, multiple: int = 8) -> int:
+    c = int(math.ceil(n_tokens * k * capacity_factor / n_experts))
+    c = max(c, k, 1)
+    return int(math.ceil(c / multiple) * multiple)
+
+
+def route(router_w, x, k: int):
+    """x (N, D) -> gates (N, k), experts (N, k), aux load-balance loss."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (N, E)
+    top_vals, top_idx = jax.lax.top_k(probs, k)
+    gates = top_vals / (jnp.sum(top_vals, axis=-1, keepdims=True) + 1e-9)
+    n_experts = router_w.shape[1]
+    # Switch-style aux loss: E * Σ_e f_e · p_e
+    assign_frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_idx, n_experts), axis=1), axis=0)
+    prob_frac = jnp.mean(probs, axis=0)
+    aux = n_experts * jnp.sum(assign_frac * prob_frac)
+    return gates, top_idx, aux
+
+
+def dispatch_gather(x, top_idx, cap: int, n_experts: int):
+    """Sort-based capacity dispatch, GATHER-only construction.
+
+    After sorting assignments by expert, expert e's tokens occupy the
+    contiguous range [starts[e], ends[e]); slot c of expert e is simply
+    sorted position starts[e] + c. The (E, C, D) buffer is then one gather —
+    no 3-D scatter (§Perf iteration A: the scatter lowering materialized a
+    buffer-sized u32 index shadow plus an (N·k, D) select; gather-based
+    dispatch removed both).
+
+    x (N, D), top_idx (N, k) -> buffer (E, C, D) + bookkeeping
+    (tok (E, C) source-token map with N = padding sentinel, valid (E, C)).
+    """
+    n, k = top_idx.shape
+    flat_expert = top_idx.reshape(-1)                    # (N*k,)
+    token_id = jnp.repeat(jnp.arange(n), k)              # (N*k,)
+    order = jnp.argsort(flat_expert)                     # stable
+    sorted_expert = flat_expert[order]
+    sorted_token = token_id[order]
+    starts = jnp.searchsorted(sorted_expert, jnp.arange(n_experts))
+    ends = jnp.searchsorted(sorted_expert, jnp.arange(n_experts),
+                            side="right")
+    j = starts[:, None] + jnp.arange(cap)[None, :]       # (E, C) sorted pos
+    valid = j < ends[:, None]
+    j_safe = jnp.where(valid, j, n * k)                  # sentinel = pad row
+    tok = jnp.where(valid, sorted_token[jnp.where(valid, j, 0)], n)
+    x_pad = jnp.concatenate([x, jnp.zeros((1, x.shape[-1]), x.dtype)])
+    buf = x_pad[tok]                                     # (E, C, D) gather
+    return buf, (order, tok, j_safe, valid)
+
+
+def combine_scatter(expert_out, bookkeeping, gates, n_tokens: int):
+    """Weighted scatter-add of expert outputs back to token positions."""
+    order, tok, j_safe, valid = bookkeeping
+    flat_gates = gates.reshape(-1)[order]                # (N*k,) sorted order
+    gates_pad = jnp.concatenate([flat_gates,
+                                 jnp.zeros((1,), flat_gates.dtype)])
+    gate_ec = gates_pad[j_safe]                          # (E, C), 0 at pads
+    weighted = expert_out * gate_ec[..., None].astype(expert_out.dtype)
+    out = jnp.zeros((n_tokens + 1, expert_out.shape[-1]), expert_out.dtype)
+    out = out.at[tok].add(weighted)
+    return out[:n_tokens]
+
+
+def moe_forward(p, x, *, k: int, act: str = "silu",
+                capacity_factor: float = 1.25):
+    """x (B, L, D) -> (B, L, D), aux_loss."""
+    b, l, d = x.shape
+    n = b * l
+    xf = x.reshape(n, d)
+    n_experts = p["router"].shape[1]
+    gates, top_idx, aux = route(p["router"], xf, k)
+    cap = capacity(n, n_experts, k, capacity_factor)
+    buf, book = dispatch_gather(xf, top_idx, cap, n_experts)
+    # Expert-parallel anchor: dispatch buffers shard over the model axis so
+    # the batched expert GLUs run as true expert parallelism (the sort/scatter
+    # dispatch ops otherwise break sharding propagation).
+    buf = constrain(buf, "model", None, None)
+    # Batched expert GLU: (E,C,D)@(E,D,F) -> (E,C,F)
+    gate_h = ACTS[act](jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    up_h = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_e = constrain(jnp.einsum("ecf,efd->ecd", gate_h * up_h, p["w_down"]),
+                      "model", None, None)
+    out = combine_scatter(out_e, book, gates.astype(out_e.dtype), n)
+    out = constrain(out, "batch", None)
+    if "shared" in p:
+        from .layers import glu_mlp
+        out = out + glu_mlp(p["shared"], xf, act)
+    return out.reshape(b, l, d), aux

@@ -1,0 +1,119 @@
+"""AdamW / Adam / SGD / momentum — the paper's local training operators 𝒯.
+
+These mirror Algorithms 2-4 in Appendix A. States are explicit NamedTuples so
+the federated layer can read/write them (state synchronization protocol 𝒮
+needs direct access to the second moment v).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import GradientTransformation
+
+
+class AdamState(NamedTuple):
+    count: jnp.ndarray
+    m: object   # pytree like params, fp32
+    v: object   # pytree like params, fp32
+
+
+def _tree_zeros_f32(params):
+    return jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def scale_by_adam(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                  bias_correction: bool = True) -> GradientTransformation:
+    """Adam preconditioning (Algorithm 4, lines 8-10)."""
+
+    def init(params):
+        return AdamState(count=jnp.zeros([], jnp.int32),
+                         m=_tree_zeros_f32(params), v=_tree_zeros_f32(params))
+
+    def update(grads, state, params=None):
+        del params
+        count = state.count + 1
+        grads32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree_util.tree_map(lambda mu, g: b1 * mu + (1 - b1) * g, state.m, grads32)
+        v = jax.tree_util.tree_map(lambda nu, g: b2 * nu + (1 - b2) * g * g, state.v, grads32)
+        if bias_correction:
+            c1 = 1 - b1 ** count.astype(jnp.float32)
+            c2 = 1 - b2 ** count.astype(jnp.float32)
+        else:
+            c1 = c2 = 1.0
+        updates = jax.tree_util.tree_map(
+            lambda mu, nu: (mu / c1) / (jnp.sqrt(nu / c2) + eps), m, v)
+        return updates, AdamState(count=count, m=m, v=v)
+
+    return GradientTransformation(init, update)
+
+
+class WeightDecayState(NamedTuple):
+    pass
+
+
+def add_decayed_weights(weight_decay: float) -> GradientTransformation:
+    """Decoupled weight decay (AdamW): adds wd * params to the update."""
+
+    def init(params):
+        del params
+        return WeightDecayState()
+
+    def update(grads, state, params=None):
+        if params is None:
+            raise ValueError("add_decayed_weights requires params")
+        updates = jax.tree_util.tree_map(
+            lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+        return updates, state
+
+    return GradientTransformation(init, update)
+
+
+class MomentumState(NamedTuple):
+    momentum: object
+
+
+def scale_by_momentum(beta: float = 0.9) -> GradientTransformation:
+    """Heavy-ball momentum (Algorithm 3): v <- beta*v + g; update = v."""
+
+    def init(params):
+        return MomentumState(momentum=_tree_zeros_f32(params))
+
+    def update(grads, state, params=None):
+        del params
+        buf = jax.tree_util.tree_map(
+            lambda b, g: beta * b + g.astype(jnp.float32), state.momentum, grads)
+        return buf, MomentumState(momentum=buf)
+
+    return GradientTransformation(init, update)
+
+
+def adamw(learning_rate, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+          clip_norm: Optional[float] = None) -> GradientTransformation:
+    from .base import chain, clip_by_global_norm, scale_by_learning_rate
+    txs = []
+    if clip_norm is not None:
+        txs.append(clip_by_global_norm(clip_norm))
+    txs += [scale_by_adam(b1, b2, eps),
+            add_decayed_weights(weight_decay),
+            scale_by_learning_rate(learning_rate)]
+    return chain(*txs)
+
+
+def adam(learning_rate, b1=0.9, b2=0.999, eps=1e-8,
+         clip_norm: Optional[float] = None) -> GradientTransformation:
+    return adamw(learning_rate, b1, b2, eps, weight_decay=0.0, clip_norm=clip_norm)
+
+
+def sgd(learning_rate, momentum: Optional[float] = None,
+        clip_norm: Optional[float] = None) -> GradientTransformation:
+    from .base import chain, clip_by_global_norm, scale_by_learning_rate
+    txs = []
+    if clip_norm is not None:
+        txs.append(clip_by_global_norm(clip_norm))
+    if momentum is not None:
+        txs.append(scale_by_momentum(momentum))
+    txs.append(scale_by_learning_rate(learning_rate))
+    return chain(*txs)

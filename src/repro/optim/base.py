@@ -1,0 +1,96 @@
+"""Minimal gradient-transformation protocol (optax is not installed).
+
+A ``GradientTransformation`` is an ``(init, update)`` pair:
+
+    state = tx.init(params)
+    updates, state = tx.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All transformations are pure pytree->pytree functions, jit/scan-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTransformation:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params, updates, is_leaf=lambda x: x is None)
+
+
+def chain(*txs: GradientTransformation) -> GradientTransformation:
+    """Compose transformations left-to-right (like optax.chain)."""
+
+    def init(params):
+        return tuple(tx.init(params) for tx in txs)
+
+    def update(grads, state, params=None):
+        new_state = []
+        for tx, s in zip(txs, state):
+            grads, s = tx.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByLrState(NamedTuple):
+    count: jnp.ndarray
+
+
+def scale_by_learning_rate(lr, flip_sign: bool = True) -> GradientTransformation:
+    """lr may be a float or a schedule(step)->lr."""
+    sign = -1.0 if flip_sign else 1.0
+
+    def init(params):
+        del params
+        return ScaleByLrState(count=jnp.zeros([], jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        step_lr = lr(state.count) if callable(lr) else lr
+        updates = jax.tree_util.tree_map(lambda g: sign * step_lr * g, grads)
+        return updates, ScaleByLrState(count=state.count + 1)
+
+    return GradientTransformation(init, update)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros([])
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+class ClipState(NamedTuple):
+    pass
+
+
+def clip_by_global_norm(max_norm: float) -> GradientTransformation:
+    """Norm-wise gradient clipping — implements Assumption 3.8 (bounded G)."""
+
+    def init(params):
+        del params
+        return ClipState()
+
+    def update(grads, state, params=None):
+        del params
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+        return jax.tree_util.tree_map(lambda g: g * scale, grads), state
+
+    return GradientTransformation(init, update)

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (paper Appendix G uses cosine with warmup)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def schedule(step):
+        del step
+        return jnp.asarray(lr, jnp.float32)
+    return schedule
+
+
+def cosine_with_warmup(peak_lr: float, warmup_steps: int, total_steps: int,
+                       final_frac: float = 0.0):
+    """Linear warmup to peak_lr, cosine decay to final_frac*peak_lr."""
+    warmup_steps = max(int(warmup_steps), 1)
+    decay_steps = max(int(total_steps) - warmup_steps, 1)
+
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * jnp.minimum(step / warmup_steps, 1.0)
+        t = jnp.clip((step - warmup_steps) / decay_steps, 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup_steps, warm, peak_lr * cos)
+
+    return schedule
+
+
+def linear_warmup_frac(peak_lr: float, warmup_frac: float, total_steps: int,
+                       final_frac: float = 0.0):
+    """Paper-style: warmup given as a fraction of total steps (e.g. 0.06)."""
+    return cosine_with_warmup(peak_lr, int(warmup_frac * total_steps),
+                              total_steps, final_frac)

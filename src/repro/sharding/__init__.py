@@ -1,0 +1,3 @@
+from .rules import ShardingRules, path_of
+
+__all__ = ["ShardingRules", "path_of"]

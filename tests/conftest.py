@@ -1,0 +1,14 @@
+"""Shared pytest fixtures.
+
+Deliberately does NOT force a host device count — the dry-run
+(repro.launch.dryrun) is the only place that fakes 512 devices; tests that
+need a small mesh spawn a subprocess (see test_sharding.py).
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _cpu_only():
+    assert jax.default_backend() == "cpu"
+    yield

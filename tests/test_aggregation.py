@@ -1,0 +1,89 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import aggregation as agg
+from repro.core.lora import LoraPair, rank_tail_energy, svd_truncate
+
+
+@pytest.fixture
+def adapters():
+    key = jax.random.PRNGKey(0)
+    k = 4
+    pairs = LoraPair(
+        a=jax.random.normal(key, (k, 2, 16)),
+        b=jax.random.normal(jax.random.fold_in(key, 1), (k, 8, 2)))
+    return {"w": pairs, "bias": None}
+
+
+def test_weighted_average_convexity():
+    """Lemma 4.1: the aggregate stays inside the convex hull."""
+    xs = {"w": jnp.stack([jnp.full((4, 4), float(i)) for i in range(5)])}
+    out = agg.weighted_average(xs, jnp.ones(5))
+    assert float(xs["w"].min()) <= float(out["w"].min())
+    assert float(out["w"].max()) <= float(xs["w"].max())
+    assert jnp.allclose(out["w"], 2.0)
+
+
+def test_factor_average_is_biased_vs_lift(adapters):
+    """ΔW̄_factor = (Σp̃B)(Σp̃A) ≠ Σp̃ BA — the update-space-mismatch bias."""
+    w = jnp.ones(4)
+    fac = agg.factor_average(adapters, w)["w"]
+    lift = agg.lift_average(adapters, w)["w"]
+    fac_delta = fac.b @ fac.a
+    assert not jnp.allclose(fac_delta, lift, atol=1e-3)
+
+
+def test_lift_average_rank_can_exceed_r(adapters):
+    """Rank of the lifted average grows up to K·r (paper §4.1)."""
+    lift = agg.lift_average(adapters, jnp.ones(4))["w"]
+    tail = rank_tail_energy(lift, 2)          # energy beyond rank 2
+    assert float(tail) > 1e-3                 # off-manifold component exists
+
+
+def test_lift_average_equals_mean_of_lifts(adapters):
+    w = jnp.array([1.0, 2.0, 3.0, 4.0])
+    lift = agg.lift_average(adapters, w)["w"]
+    wn = w / w.sum()
+    manual = sum(wn[i] * adapters["w"].b[i] @ adapters["w"].a[i]
+                 for i in range(4))
+    assert jnp.allclose(lift, manual, atol=1e-4)
+
+
+def test_lora_fair_refines_toward_mean_lift(adapters):
+    w = jnp.ones(4)
+    fac = agg.factor_average(adapters, w)["w"]
+    fair = agg.lora_fair_refine(adapters, w, scale=1.0)["w"]
+    lift = agg.lift_average(adapters, w, scale=1.0)["w"]
+    err_fac = jnp.linalg.norm(fac.b @ fac.a - lift)
+    err_fair = jnp.linalg.norm(fair.b @ fair.a - lift)
+    assert float(err_fair) <= float(err_fac) + 1e-5
+
+
+def test_fr_lora_merge_preserves_mean_delta(adapters):
+    base = {"w": jnp.zeros((8, 16)), "bias": jnp.zeros(3)}
+    w = jnp.ones(4)
+    merged = agg.fr_lora_merge(base, adapters, w, scale=1.0)
+    lift = agg.lift_average(adapters, w, scale=1.0)["w"]
+    assert jnp.allclose(merged["w"], lift, atol=1e-4)
+    assert jnp.allclose(merged["bias"], 0.0)
+
+
+def test_truncate_to_rank():
+    key = jax.random.PRNGKey(2)
+    d = jax.random.normal(key, (16, 16))
+    out = agg.truncate_to_rank({"w": d}, 4)["w"]
+    s = jnp.linalg.svd(out, compute_uv=False)
+    assert float(s[4]) < 1e-4                 # rank ≤ 4
+    # Eckart-Young optimality: truncation error == tail energy
+    assert jnp.allclose(jnp.linalg.norm(out - d), rank_tail_energy(d, 4),
+                        rtol=1e-4)
+
+
+def test_svd_truncate_roundtrip():
+    key = jax.random.PRNGKey(3)
+    pair = LoraPair(a=jax.random.normal(key, (3, 16)),
+                    b=jax.random.normal(jax.random.fold_in(key, 1), (8, 3)))
+    delta = pair.b @ pair.a
+    refac = svd_truncate(delta, 3)
+    assert jnp.allclose(refac.b @ refac.a, delta, atol=1e-4)

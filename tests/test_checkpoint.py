@@ -1,0 +1,35 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import latest_step, restore, save
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16)},
+            "list": [jnp.zeros((2,)), jnp.full((3,), 7.0)]}
+    save(str(tmp_path), 3, tree)
+    out = restore(str(tmp_path), 3, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype
+        assert jnp.allclose(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def test_latest_step(tmp_path):
+    tree = {"x": jnp.zeros((1,))}
+    assert latest_step(str(tmp_path)) is None
+    save(str(tmp_path), 1, tree)
+    save(str(tmp_path), 5, tree)
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_restores_namedtuple_state(tmp_path):
+    from repro.core.galore import GaloreConfig, galore_init
+    params = {"w": jnp.ones((8, 8))}
+    st = galore_init(GaloreConfig(rank=2), params)
+    save(str(tmp_path), 0, st, name="opt")
+    out = restore(str(tmp_path), 0, st, name="opt")
+    assert type(out) is type(st)
+    assert jnp.allclose(out.blocks["w"].basis, st.blocks["w"].basis)

@@ -1,0 +1,100 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (ASSIGNED_ARCHS, SHAPES, cache_len, get_config,
+                           input_specs, list_configs, shape_variant,
+                           smoke_variant)
+
+
+def test_all_assigned_archs_registered():
+    names = list_configs()
+    for a in ASSIGNED_ARCHS:
+        assert a in names
+
+
+def test_exact_assigned_dimensions():
+    """The configs must match the assignment table exactly."""
+    c = get_config("granite-moe-1b-a400m")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (24, 1024, 16, 8)
+    assert (c.d_ff, c.vocab_size, c.n_experts, c.experts_per_token) == \
+        (512, 49155, 32, 8)
+    c = get_config("deepseek-v2-236b")
+    assert (c.n_layers, c.d_model, c.n_heads) == (60, 5120, 128)
+    assert (c.kv_lora_rank, c.n_experts, c.experts_per_token,
+            c.n_shared_experts) == (512, 160, 6, 2)
+    c = get_config("command-r-35b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 8192, 64, 8, 22528, 256000)
+    c = get_config("mistral-nemo-12b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 5120, 32, 8, 14336, 131072)
+    c = get_config("qwen1.5-0.5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size, c.qkv_bias) == (24, 1024, 16, 16, 2816, 151936, True)
+    c = get_config("pixtral-12b")
+    assert c.family == "vlm" and c.frontend == "vision"
+    c = get_config("jamba-1.5-large-398b")
+    assert (c.n_layers, c.d_model, c.n_experts, c.experts_per_token) == \
+        (72, 8192, 16, 2)
+    assert c.attn_period == 8                       # 1:7 interleave
+    c = get_config("starcoder2-7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (32, 4608, 36, 4, 18432, 49152)
+    c = get_config("musicgen-medium")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab_size) == \
+        (48, 1536, 24, 6144, 2048)
+    c = get_config("rwkv6-1.6b")
+    assert c.rwkv and (c.n_layers, c.d_model, c.d_ff, c.vocab_size) == \
+        (24, 2048, 7168, 65536)
+
+
+def test_layer_kinds_jamba():
+    c = get_config("jamba-1.5-large-398b")
+    kinds = c.layer_kinds()
+    attn_layers = [i for i, (m, _) in enumerate(kinds) if m == "attn"]
+    assert len(attn_layers) == 9                    # 72 / 8
+    assert all(i % 8 == 3 for i in attn_layers)
+    moe_layers = [i for i, (_, f) in enumerate(kinds) if f == "moe"]
+    assert len(moe_layers) == 36                    # every other layer
+    assert c.block_period() == 8 and c.n_blocks() == 9
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_long_context_variant_subquadratic(arch):
+    cfg = shape_variant(get_config(arch), SHAPES["long_500k"])
+    assert cfg.sub_quadratic(), arch
+    cl = cache_len(cfg, SHAPES["long_500k"])
+    assert cl <= 8192 or cfg.rwkv            # ring buffer stays O(window)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_no_allocation(arch, shape):
+    cfg = get_config(arch)
+    specs = input_specs(cfg, SHAPES[shape])
+    for leaf in jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    if SHAPES[shape].kind == "train":
+        assert specs["tokens"].shape[0] == SHAPES[shape].global_batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_variant_constraints(arch):
+    s = smoke_variant(get_config(arch))
+    assert s.n_layers == 2
+    assert s.d_model <= 512
+    assert s.n_experts <= 4
+    assert s.family == get_config(arch).family

@@ -1,0 +1,72 @@
+import numpy as np
+import pytest
+
+from repro.data import (FederatedBatcher, dirichlet_label_partition,
+                        heterogeneity_stats, iid_partition, markov_lm,
+                        patch_classification, seq_classification)
+
+
+def test_dirichlet_partition_covers_and_skews():
+    labels = np.repeat(np.arange(8), 100)
+    parts = dirichlet_label_partition(labels, 10, alpha=0.5, seed=0)
+    assert sum(len(p) for p in parts) >= len(labels) * 0.99
+    stats = heterogeneity_stats(labels, parts)
+    assert stats["mean_tv"] > 0.2          # severe non-IID at alpha=0.5
+
+
+def test_alpha_controls_heterogeneity():
+    """Smaller alpha => larger TV distance to the global distribution
+    (paper Appendix H / Figure 6)."""
+    labels = np.repeat(np.arange(10), 200)
+    tvs = []
+    for alpha in (0.1, 1.0, 100.0):
+        parts = dirichlet_label_partition(labels, 20, alpha, seed=1)
+        tvs.append(heterogeneity_stats(labels, parts)["mean_tv"])
+    assert tvs[0] > tvs[1] > tvs[2]
+
+
+def test_iid_partition_balanced():
+    parts = iid_partition(1000, 10, seed=0)
+    sizes = [len(p) for p in parts]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_seq_classification_learnable_structure():
+    task = seq_classification(200, 4, 16, 64, seed=0)
+    assert task.tokens.shape == (200, 16)
+    assert (task.labels[:, :-1] == -1).all()
+    assert set(np.unique(task.class_ids)) <= set(range(4))
+    # label token encodes the class
+    assert (task.labels[:, -1] == 60 + task.class_ids).all()
+
+
+def test_markov_lm_types():
+    task = markov_lm(50, 3, 12, 32, seed=0)
+    assert task.tokens.shape == (50, 12)
+    assert (task.labels[:, :-1] == task.tokens[:, 1:]).all()
+
+
+def test_patch_classification_embeds():
+    task = patch_classification(40, 5, 16, 32, vocab=100, seed=0)
+    assert task.embeds.shape == (40, 16, 32)
+    assert task.labels[:, -1].max() < 100
+
+
+def test_batcher_shapes_and_cycling():
+    task = seq_classification(64, 4, 8, 32, seed=0)
+    b = FederatedBatcher(task, n_clients=4, batch_size=4, alpha=0.5, seed=0)
+    batch = b.round_batches(local_steps=3)
+    assert batch["tokens"].shape == (4, 3, 4, 8)
+    assert batch["labels"].shape == (4, 3, 4, 8)
+    # cycling: a tiny client shard can still fill many rounds
+    for _ in range(10):
+        b.round_batches(local_steps=3)
+
+
+def test_batcher_partial_participation():
+    task = seq_classification(64, 4, 8, 32, seed=0)
+    b = FederatedBatcher(task, n_clients=10, batch_size=2, alpha=None, seed=0)
+    clients = b.sample_clients(3)
+    assert len(clients) == 3 and len(set(clients)) == 3
+    batch = b.round_batches(2, clients)
+    assert batch["tokens"].shape[0] == 3

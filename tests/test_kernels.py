@@ -1,0 +1,127 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestGaloreKernel:
+    @pytest.mark.parametrize("m,n,r", [(128, 128, 8), (256, 128, 32),
+                                       (128, 256, 16), (512, 128, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, m, n, r, dtype):
+        ks = jax.random.split(KEY, 5)
+        w = jax.random.normal(ks[0], (m, n), dtype)
+        g = jax.random.normal(ks[1], (m, n), dtype)
+        basis = jnp.linalg.qr(jax.random.normal(ks[2], (n, r)))[0]
+        mm = 0.1 * jax.random.normal(ks[3], (m, r), jnp.float32)
+        vv = 0.01 * jnp.abs(jax.random.normal(ks[4], (m, r), jnp.float32))
+        out_k = ops.galore_adamw_step(w, g, basis, mm, vv, 5.0,
+                                      lr=1e-2, weight_decay=0.01)
+        out_r = ref.galore_adamw_ref(w, g, basis, mm, vv, count=5.0,
+                                     lr=1e-2, weight_decay=0.01)
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        for a, b in zip(out_k, out_r):
+            assert jnp.allclose(a.astype(jnp.float32),
+                                b.astype(jnp.float32), atol=tol), (m, n, r)
+
+    def test_block_rows_invariance(self):
+        ks = jax.random.split(KEY, 5)
+        m, n, r = 256, 128, 8
+        w = jax.random.normal(ks[0], (m, n))
+        g = jax.random.normal(ks[1], (m, n))
+        basis = jnp.linalg.qr(jax.random.normal(ks[2], (n, r)))[0]
+        mm = jnp.zeros((m, r)); vv = jnp.zeros((m, r))
+        a = ops.galore_adamw_step(w, g, basis, mm, vv, 1.0, block_rows=64)
+        b = ops.galore_adamw_step(w, g, basis, mm, vv, 1.0, block_rows=256)
+        assert jnp.allclose(a[0], b[0], atol=1e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("lq,lk,h,hkv,d", [
+        (128, 128, 4, 4, 64),      # MHA square
+        (128, 256, 4, 2, 64),      # GQA + longer KV (decode-suffix style)
+        (256, 256, 8, 2, 128),     # GQA 4:1, MXU-width head
+    ])
+    @pytest.mark.parametrize("window", [0, 64])
+    def test_matches_ref(self, lq, lk, h, hkv, d, window):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (2, lq, h, d), jnp.float32)
+        k = jax.random.normal(ks[1], (2, lk, hkv, d), jnp.float32)
+        v = jax.random.normal(ks[2], (2, lk, hkv, d), jnp.float32)
+        o_k = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  block_q=64, block_k=64)
+        o_r = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        assert jnp.allclose(o_k, o_r, atol=2e-5), (lq, lk, h, hkv, d, window)
+
+    def test_bf16(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 64), jnp.bfloat16)
+        k = jax.random.normal(ks[1], (1, 128, 2, 64), jnp.bfloat16)
+        v = jax.random.normal(ks[2], (1, 128, 2, 64), jnp.bfloat16)
+        o_k = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+        o_r = ref.flash_attention_ref(q, k, v)
+        assert jnp.allclose(o_k.astype(jnp.float32),
+                            o_r.astype(jnp.float32), atol=3e-2)
+
+    def test_matches_model_attention(self):
+        """Kernel output == the model's einsum attention (same masking)."""
+        from repro.models.attention import attend, causal_mask
+        ks = jax.random.split(KEY, 3)
+        b, l, h, d = 2, 128, 4, 64
+        q = jax.random.normal(ks[0], (b, l, h, d))
+        k = jax.random.normal(ks[1], (b, l, 2, d))
+        v = jax.random.normal(ks[2], (b, l, 2, d))
+        pos = jnp.arange(l)
+        mask = causal_mask(pos, pos)[None]
+        o_model = attend(q, k, v, mask)
+        o_kernel = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+        assert jnp.allclose(o_model, o_kernel, atol=2e-5)
+
+
+class TestRwkv6Kernel:
+    @pytest.mark.parametrize("l,h,d,chunk", [(64, 2, 64, 32), (128, 4, 64, 64),
+                                             (64, 1, 128, 64)])
+    def test_matches_ref(self, l, h, d, chunk):
+        ks = jax.random.split(KEY, 5)
+        shape = (2, l, h, d)
+        r = 0.5 * jax.random.normal(ks[0], shape)
+        k = 0.5 * jax.random.normal(ks[1], shape)
+        v = 0.5 * jax.random.normal(ks[2], shape)
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], shape))
+        u = 0.1 * jax.random.normal(ks[4], (h, d))
+        y_k, s_k = ops.rwkv6_scan(r, k, v, w, u, chunk=chunk)
+        y_r, s_r = ref.rwkv6_scan_ref(r, k, v, w, u)
+        assert jnp.allclose(y_k, y_r, atol=1e-4)
+        assert jnp.allclose(s_k, s_r, atol=1e-4)
+
+    def test_initial_state_carried(self):
+        ks = jax.random.split(KEY, 6)
+        shape = (1, 32, 2, 64)
+        r, k, v = (0.3 * jax.random.normal(ks[i], shape) for i in range(3))
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], shape))
+        u = 0.1 * jax.random.normal(ks[4], (2, 64))
+        s0 = 0.5 * jax.random.normal(ks[5], (1, 2, 64, 64))
+        y_k, s_k = ops.rwkv6_scan(r, k, v, w, u, s0, chunk=32)
+        y_r, s_r = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+        assert jnp.allclose(y_k, y_r, atol=1e-4)
+        assert jnp.allclose(s_k, s_r, atol=1e-4)
+
+    def test_kernel_matches_model_layer_math(self):
+        """The kernel recurrence == the RWKV layer's scan recurrence."""
+        from repro.models import rwkv as rw
+        d_model = 128
+        h = d_model // rw.HEAD_SIZE
+        ks = jax.random.split(KEY, 5)
+        shape = (1, 16, h, rw.HEAD_SIZE)
+        r = 0.3 * jax.random.normal(ks[0], shape)
+        k = 0.3 * jax.random.normal(ks[1], shape)
+        v = 0.3 * jax.random.normal(ks[2], shape)
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], shape))
+        u = 0.1 * jax.random.normal(ks[4], (h, rw.HEAD_SIZE))
+        y_kernel, _ = ops.rwkv6_scan(r, k, v, w, u, chunk=16)
+        y_ref, _ = ref.rwkv6_scan_ref(r, k, v, w, u)
+        assert jnp.allclose(y_kernel, y_ref, atol=1e-4)

@@ -1,0 +1,48 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import lora
+
+
+def test_lora_init_zero_delta():
+    pair = lora.lora_init(jax.random.PRNGKey(0), (8, 16), 4)
+    assert pair.b.shape == (8, 4) and pair.a.shape == (4, 16)
+    assert jnp.allclose(lora.lora_delta(pair), 0.0)   # B starts at zero
+
+
+def test_tree_lora_init_targets_only():
+    params = {"attn": {"wq": jnp.zeros((8, 8))},
+              "norm": {"scale": jnp.zeros((8,))}}
+    ad = lora.tree_lora_init(jax.random.PRNGKey(0), params,
+                             lambda p, l: "attn" in p, rank=2)
+    assert isinstance(ad["attn"]["wq"], lora.LoraPair)
+    assert ad["norm"]["scale"] is None
+
+
+def test_apply_lora_additive():
+    params = {"w": jnp.ones((4, 4))}
+    pair = lora.LoraPair(a=jnp.ones((1, 4)), b=jnp.ones((4, 1)))
+    out = lora.apply_lora(params, {"w": pair}, scale=2.0)
+    assert jnp.allclose(out["w"], 1.0 + 2.0)
+
+
+def test_rank_tail_energy_zero_for_lowrank():
+    pair = lora.LoraPair(a=jax.random.normal(jax.random.PRNGKey(0), (2, 8)),
+                         b=jax.random.normal(jax.random.PRNGKey(1), (8, 2)))
+    delta = pair.b @ pair.a
+    assert float(lora.rank_tail_energy(delta, 2)) < 1e-4
+    assert float(lora.rank_tail_energy(delta, 1)) > 1e-3
+
+
+def test_effective_rank():
+    d = jnp.diag(jnp.array([5.0, 3.0, 1e-9, 0.0]))
+    assert int(lora.effective_rank(d)) == 2
+
+
+def test_svd_truncate_best_approx():
+    key = jax.random.PRNGKey(2)
+    w = jax.random.normal(key, (10, 10))
+    pair = lora.svd_truncate(w, 3)
+    err = jnp.linalg.norm(pair.b @ pair.a - w)
+    assert jnp.allclose(err, lora.rank_tail_energy(w, 3), rtol=1e-4)

@@ -1,0 +1,80 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.optim.base import apply_updates, global_norm
+
+
+def test_adamw_first_step_analytic():
+    """After one step from zero state, bias-corrected Adam update == g/(|g|+eps)
+    elementwise (sign-like)."""
+    params = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.array([1.0, -2.0, 0.5, 0.0])}
+    tx = optim.scale_by_adam(eps=1e-8)
+    st = tx.init(params)
+    u, st = tx.update(g, st, params)
+    expect = g["w"] / (jnp.abs(g["w"]) + 1e-8)
+    assert jnp.allclose(u["w"], expect, atol=1e-5)
+
+
+def test_sgd_matches_manual():
+    params = {"w": jnp.ones((3,))}
+    tx = optim.sgd(0.1)
+    st = tx.init(params)
+    g = {"w": jnp.array([1.0, 2.0, 3.0])}
+    u, st = tx.update(g, st, params)
+    new = apply_updates(params, u)
+    assert jnp.allclose(new["w"], params["w"] - 0.1 * g["w"])
+
+
+def test_momentum_accumulates():
+    params = {"w": jnp.zeros((1,))}
+    tx = optim.scale_by_momentum(0.9)
+    st = tx.init(params)
+    g = {"w": jnp.ones((1,))}
+    u1, st = tx.update(g, st, params)
+    u2, st = tx.update(g, st, params)
+    assert jnp.allclose(u2["w"], 1.9)        # v = 0.9*1 + 1
+
+
+def test_clip_by_global_norm():
+    tx = optim.clip_by_global_norm(1.0)
+    st = tx.init(None)
+    g = {"a": jnp.full((4,), 10.0)}
+    u, _ = tx.update(g, st, None)
+    assert float(global_norm(u)) <= 1.0 + 1e-5
+    g_small = {"a": jnp.full((4,), 0.01)}
+    u2, _ = tx.update(g_small, st, None)
+    assert jnp.allclose(u2["a"], g_small["a"])   # below threshold: untouched
+
+
+def test_weight_decay_decoupled():
+    tx = optim.add_decayed_weights(0.1)
+    st = tx.init(None)
+    u, _ = tx.update({"w": jnp.zeros((2,))}, st, {"w": jnp.ones((2,))})
+    assert jnp.allclose(u["w"], 0.1)
+
+
+def test_cosine_schedule_endpoints():
+    sched = optim.cosine_with_warmup(1.0, warmup_steps=10, total_steps=110)
+    assert float(sched(0)) == 0.0
+    assert abs(float(sched(10)) - 1.0) < 1e-6
+    assert float(sched(5)) == pytest.approx(0.5, abs=1e-6)
+    assert float(sched(110)) < 1e-6
+    # monotone decay after warmup
+    vals = [float(sched(s)) for s in range(10, 111, 10)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_adamw_converges_quadratic():
+    target = jnp.array([3.0, -2.0])
+    params = {"w": jnp.zeros((2,))}
+    tx = optim.adamw(0.1, weight_decay=0.0)
+    st = tx.init(params)
+    for _ in range(200):
+        g = {"w": 2 * (params["w"] - target)}
+        u, st = tx.update(g, st, params)
+        params = apply_updates(params, u)
+    assert jnp.allclose(params["w"], target, atol=1e-2)

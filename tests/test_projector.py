@@ -1,0 +1,117 @@
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projector as proj
+
+
+def test_side_rule_std():
+    assert proj.proj_side((16, 8)) == proj.RIGHT       # m >= n
+    assert proj.proj_side((8, 8)) == proj.RIGHT        # square -> right
+    assert proj.proj_side((8, 16)) == proj.LEFT
+    assert proj.proj_side((4, 8, 16)) == proj.LEFT     # leading stacked dim
+
+
+def test_basis_dim():
+    assert proj.basis_dim((16, 8)) == 8
+    assert proj.basis_dim((8, 16)) == 8
+
+
+@settings(max_examples=20, deadline=None)
+@given(dim=st.integers(8, 64), rank=st.integers(1, 8), seed=st.integers(0, 999))
+def test_random_basis_orthonormal(dim, rank, seed):
+    rank = min(rank, dim)
+    b = proj.random_basis(seed, dim, rank)
+    assert b.shape == (dim, rank)
+    assert jnp.allclose(b.T @ b, jnp.eye(rank), atol=1e-5)
+
+
+def test_random_basis_deterministic():
+    a = proj.random_basis(42, 32, 4)
+    b = proj.random_basis(42, 32, 4)
+    c = proj.random_basis(43, 32, 4)
+    assert jnp.array_equal(a, b)
+    assert not jnp.allclose(a, c)
+
+
+@pytest.mark.parametrize("shape", [(32, 16), (16, 32), (24, 24)])
+def test_svd_basis_captures_top_subspace(shape):
+    key = jax.random.PRNGKey(0)
+    r = 4
+    side = proj.proj_side(shape)
+    # Build a matrix with known rank-r structure.
+    u = jnp.linalg.qr(jax.random.normal(key, (shape[0], r)))[0]
+    v = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1),
+                                        (shape[1], r)))[0]
+    g = u @ jnp.diag(jnp.array([10., 8., 6., 4.])) @ v.T
+    basis = proj.svd_basis(g, r, side)
+    # Projection through the basis should reconstruct g almost exactly.
+    recon = proj.project_back(proj.project(g, basis, side), basis, side)
+    assert float(jnp.linalg.norm(recon - g) / jnp.linalg.norm(g)) < 1e-4
+
+
+@pytest.mark.parametrize("shape", [(64, 32), (32, 64)])
+def test_rsvd_close_to_svd(shape):
+    key = jax.random.PRNGKey(1)
+    side = proj.proj_side(shape)
+    g = jax.random.normal(key, shape)
+    # low effective rank signal + small noise
+    u, s, vt = jnp.linalg.svd(g, full_matrices=False)
+    s = s.at[6:].multiply(0.01)
+    g = (u * s) @ vt
+    b_svd = proj.svd_basis(g, 4, side)
+    b_rsvd = proj.rsvd_basis(g, 4, side, jax.random.PRNGKey(2), oversample=8)
+    # compare captured energy, not the bases themselves
+    e_svd = jnp.linalg.norm(proj.project(g, b_svd, side))
+    e_rsvd = jnp.linalg.norm(proj.project(g, b_rsvd, side))
+    assert float(e_rsvd) > 0.95 * float(e_svd)
+
+
+@pytest.mark.parametrize("side,shape", [(proj.RIGHT, (16, 8)),
+                                        (proj.LEFT, (8, 16))])
+def test_project_roundtrip_in_subspace(side, shape):
+    key = jax.random.PRNGKey(3)
+    dim = proj.basis_dim(shape)
+    basis = proj.random_basis(0, dim, 4)
+    # A gradient already inside the subspace projects back exactly.
+    coeff = jax.random.normal(key, (shape[0], 4) if side == proj.RIGHT
+                              else (4, shape[1]))
+    g = proj.project_back(coeff, basis, side)
+    coeff2 = proj.project(g, basis, side)
+    assert jnp.allclose(coeff, coeff2, atol=1e-5)
+
+
+def test_reproject_identity_when_basis_unchanged():
+    basis = proj.random_basis(0, 32, 4)
+    buf = jax.random.normal(jax.random.PRNGKey(4), (16, 4))
+    out = proj.reproject(buf, basis, basis, proj.RIGHT)
+    assert jnp.allclose(out, buf, atol=1e-5)
+
+
+def test_reproject_matches_lift_reproject():
+    """Low-rank change-of-basis == lift to ambient then re-project."""
+    b_old = proj.random_basis(0, 32, 4)
+    b_new = proj.random_basis(1, 32, 4)
+    buf = jax.random.normal(jax.random.PRNGKey(5), (16, 4))
+    fast = proj.reproject(buf, b_old, b_new, proj.RIGHT)
+    lifted = proj.project_back(buf, b_old, proj.RIGHT)
+    slow = proj.project(lifted, b_new, proj.RIGHT)
+    assert jnp.allclose(fast, slow, atol=1e-5)
+
+
+def test_stacked_project_matches_per_layer():
+    key = jax.random.PRNGKey(6)
+    g = jax.random.normal(key, (3, 16, 8))
+    bases = jnp.stack([proj.random_basis(i, 8, 4) for i in range(3)])
+    stacked = proj.project(g, bases, proj.RIGHT)
+    per = jnp.stack([proj.project(g[i], bases[i], proj.RIGHT)
+                     for i in range(3)])
+    assert jnp.allclose(stacked, per, atol=1e-6)
+
+
+def test_stacked_keys_distinct():
+    keys = proj.stacked_keys(jax.random.PRNGKey(0), 4)
+    assert keys.shape[0] == 4
+    flat = set(map(tuple, jax.device_get(keys).tolist()))
+    assert len(flat) == 4

@@ -1,0 +1,124 @@
+"""Hypothesis property tests over the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+from repro.core import projector as proj
+from repro.core.lora import LoraPair, rank_tail_energy
+from repro.data.partition import dirichlet_label_partition
+from repro.models import moe
+
+jax.config.update("jax_platform_name", "cpu")
+
+dims = st.integers(4, 32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, n=dims, seed=st.integers(0, 10**6))
+def test_projection_is_contraction(m, n, seed):
+    """‖project(g)‖_F ≤ ‖g‖_F for any orthonormal basis (Pythagoras)."""
+    key = jax.random.PRNGKey(seed)
+    g = jax.random.normal(key, (m, n))
+    side = proj.proj_side((m, n))
+    r = min(4, m, n)
+    basis = proj.random_basis(seed, proj.basis_dim((m, n)), r)
+    gt = proj.project(g, basis, side)
+    assert float(jnp.linalg.norm(gt)) <= float(jnp.linalg.norm(g)) + 1e-4
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=dims, n=dims, seed=st.integers(0, 10**6))
+def test_project_back_preserves_subspace_energy(m, n, seed):
+    """project_back is an isometry on coefficients: ‖ũP‖_F = ‖ũ‖_F."""
+    key = jax.random.PRNGKey(seed)
+    side = proj.proj_side((m, n))
+    r = min(4, m, n)
+    basis = proj.random_basis(seed, proj.basis_dim((m, n)), r)
+    coeff_shape = (m, r) if side == proj.RIGHT else (r, n)
+    ut = jax.random.normal(key, coeff_shape)
+    u = proj.project_back(ut, basis, side)
+    assert np.isclose(float(jnp.linalg.norm(u)), float(jnp.linalg.norm(ut)),
+                      rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(2, 6), seed=st.integers(0, 10**6),
+       w_raw=st.lists(st.floats(0.1, 10.0), min_size=6, max_size=6))
+def test_fedavg_convex_hull(k, seed, w_raw):
+    """Lemma 4.1: weighted averages stay in the elementwise convex hull."""
+    key = jax.random.PRNGKey(seed)
+    xs = {"w": jax.random.normal(key, (k, 5, 5))}
+    w = jnp.asarray(w_raw[:k])
+    out = agg.weighted_average(xs, w)["w"]
+    lo = jnp.min(xs["w"], axis=0) - 1e-5
+    hi = jnp.max(xs["w"], axis=0) + 1e-5
+    assert bool(jnp.all(out >= lo) and jnp.all(out <= hi))
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(2, 5), r=st.integers(1, 3), seed=st.integers(0, 10**6))
+def test_factor_avg_rank_bounded_lift_not(k, r, seed):
+    """Factor averaging stays rank ≤ r; lift averaging generally exceeds it
+    (update-space mismatch, §4.1)."""
+    key = jax.random.PRNGKey(seed)
+    m = n = 12
+    ad = {"w": LoraPair(a=jax.random.normal(key, (k, r, n)),
+                        b=jax.random.normal(jax.random.fold_in(key, 1),
+                                            (k, m, r)))}
+    w = jnp.ones(k)
+    fac = agg.factor_average(ad, w)["w"]
+    tail_fac = rank_tail_energy(fac.b @ fac.a, r)
+    assert float(tail_fac) < 1e-4
+    lift = agg.lift_average(ad, w)["w"]
+    if k * r <= min(m, n):       # rank can actually grow
+        assert float(rank_tail_energy(lift, r)) >= 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(n_tokens=st.integers(4, 64), e=st.integers(2, 8),
+       topk=st.integers(1, 3), seed=st.integers(0, 10**6))
+def test_moe_route_invariants(n_tokens, e, topk, seed):
+    topk = min(topk, e)
+    key = jax.random.PRNGKey(seed)
+    router = jax.random.normal(key, (8, e))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (n_tokens, 8))
+    gates, idx, aux = moe.route(router, x, topk)
+    assert bool(jnp.all(gates >= 0))
+    assert np.allclose(np.asarray(jnp.sum(gates, -1)), 1.0, atol=1e-5)
+    assert int(idx.max()) < e
+    assert float(aux) >= 0.99     # Switch aux loss lower bound is ~1
+
+
+@settings(max_examples=8, deadline=None)
+@given(n_classes=st.integers(2, 10), n_clients=st.integers(2, 12),
+       seed=st.integers(0, 1000))
+def test_dirichlet_partition_is_a_partition(n_classes, n_clients, seed):
+    labels = np.repeat(np.arange(n_classes), 40)
+    parts = dirichlet_label_partition(labels, n_clients, 0.5, seed=seed,
+                                      min_per_client=0)
+    allidx = np.concatenate([p for p in parts if len(p)])
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6), steps=st.integers(1, 5))
+def test_galore_update_stays_in_span(seed, steps):
+    """Without refresh, every GaLore update lies in the basis row-span."""
+    from repro.core import galore as gal
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, (12, 12))}
+    cfg = gal.GaloreConfig(rank=3, refresh_every=10**9, refresh_mode="random")
+    tx = gal.scale_by_galore(cfg)
+    st_ = tx.init(params)
+    basis = st_.blocks["w"].basis            # (12, 3)
+    for i in range(steps):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (12, 12))}
+        u, st_ = tx.update(g, st_, params)
+    # residual after projecting the update onto the span must vanish
+    u_w = u["w"]
+    proj_u = u_w @ basis @ basis.T
+    assert float(jnp.linalg.norm(u_w - proj_u)) < 1e-4 * max(
+        1.0, float(jnp.linalg.norm(u_w)))
