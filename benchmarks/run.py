@@ -1,6 +1,7 @@
 """Run every paper-table benchmark. Prints ``name,us_per_call,derived`` CSV.
 
 One benchmark per paper artifact:
+  §5/App. A.1   -> bench_galore_fused     (fused vs dense hot paths)
   Tables 3/4/5  -> bench_fed_methods      (IID vs Dirichlet-0.5 across methods)
   Table 6/Fig3ab-> bench_landscape        (kinetic-trap basin fractions)
   Fig 3c        -> bench_interpolation    (client-model loss barriers)
@@ -21,11 +22,13 @@ import traceback
 
 def main() -> None:
     from . import (bench_ajive_latency, bench_ajive_recovery, bench_comm,
-                   bench_fed_methods, bench_interpolation, bench_landscape,
-                   bench_projector_schedule, bench_state_mismatch)
+                   bench_fed_methods, bench_galore_fused, bench_interpolation,
+                   bench_landscape, bench_projector_schedule,
+                   bench_state_mismatch)
 
     print("name,us_per_call,derived")
     suites = [
+        ("galore_fused", bench_galore_fused.main),
         ("ajive_latency", bench_ajive_latency.main),
         ("ajive_recovery", bench_ajive_recovery.main),
         ("comm", bench_comm.main),

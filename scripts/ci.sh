@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 verify entrypoint (the exact command from ROADMAP.md).
+#
+# Usage: scripts/ci.sh [extra pytest args]
+# Dev-only deps (pytest, hypothesis) are listed in requirements-dev.txt;
+# tests that need hypothesis self-skip when it is absent.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -15,6 +15,19 @@ The federated server applies this to the lifted second-moment views
 ``V^{i} = ṽ_T^{i} R_kᵀ`` and broadcasts the shared component (§5 "Why AJIVE").
 All SVDs are economy-size and MXU-lowerable; resampling uses explicit keys so
 the estimator is deterministic and jit-safe with static ranks.
+
+Factored fast path
+------------------
+Every federated input has rank ≤ r by construction (ṽ is (·, r) and the
+shared basis is orthonormal), so the dense pipeline above — per-view SVDs of
+``(m, n)`` lifted views and an ``(n, n)`` joint projector — does O(n²)-to-
+O(n³) work to recover structure that lives entirely in a ``(C·r)``-dimensional
+score space. :func:`ajive_sync_factored` runs Phases 1–3 directly on the
+*projected* moments: per-view SVDs via the r×r Gram factor, the joint basis
+via the (C·r)×(C·r) score Gram, and the joint projector applied as two skinny
+GEMMs. It never materializes a dense view and returns the synchronized state
+in projected shape. The dense :func:`ajive_sync` is retained as the parity
+oracle.
 """
 from __future__ import annotations
 
@@ -174,6 +187,14 @@ def ajive(views: jnp.ndarray, signal_ranks, joint_rank: Optional[int] = None,
     return result
 
 
+def normalize_weights(weights: Optional[jnp.ndarray], k: int) -> jnp.ndarray:
+    """Client weights as a normalized fp32 simplex point (None = uniform)."""
+    if weights is None:
+        return jnp.full((k,), 1.0 / k, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    return w / jnp.sum(w)
+
+
 def ajive_sync(views: jnp.ndarray, rank: int,
                weights: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Server-side second-moment synchronization (Algorithm 1, line 12).
@@ -188,3 +209,97 @@ def ajive_sync(views: jnp.ndarray, rank: int,
         return res.joint_mean
     w = weights / jnp.sum(weights)
     return jnp.einsum("k,knm->nm", w, res.joint)
+
+
+# ------------------------------------------------------ factored fast path --
+
+def _topk_eig_desc(sym: jnp.ndarray, k: int):
+    """Top-k eigenpairs of a small symmetric PSD matrix, descending."""
+    lam, vec = jnp.linalg.eigh(sym)
+    lam = jnp.maximum(lam[::-1], 0.0)
+    vec = vec[:, ::-1]
+    return lam[:k], vec[:, :k]
+
+
+def _inv_sqrt_rank_safe(lam: jnp.ndarray, rel_tol: float = 1e-10):
+    """1/√λ per eigendirection, with numerically-null directions
+    (λ ≤ rel_tol·λ_max) mapped to 0 instead of noise-amplified — a
+    rank-revealing floor so rank-deficient inputs degrade gracefully rather
+    than injecting amplified round-off into the score space."""
+    lam_max = lam[..., :1]                         # sorted descending
+    keep = lam > rel_tol * lam_max
+    return jnp.where(keep, 1.0 / jnp.sqrt(jnp.where(keep, lam, 1.0)), 0.0)
+
+
+def _factored_joint_scores(scores: jnp.ndarray, joint_rank: int):
+    """Phase 2 on the stacked score matrix S (d, C·k) via its (C·k)×(C·k)
+    Gram: u_joint = S W Λ^{-1/2}. Avoids the O(d·(Ck)²)-with-large-constant
+    dense SVD and never touches the ambient dimension."""
+    gram = scores.T @ scores                       # (C·k, C·k)
+    lam, w = _topk_eig_desc(gram, joint_rank)
+    return scores @ (w * _inv_sqrt_rank_safe(lam)[None, :])
+
+
+def ajive_sync_factored(v_stack: jnp.ndarray, rank: int,
+                        weights: Optional[jnp.ndarray] = None,
+                        side: str = "right") -> jnp.ndarray:
+    """Server-side second-moment sync on *projected* moments (Alg. 1 l.12).
+
+    The lifted view of client i is ``V^i = ṽ^i Bᵀ`` (right blocks) or
+    ``B ṽ^i`` (left blocks) with one shared orthonormal basis B — rank ≤ r.
+    Left-multiplying by B never changes column-space geometry, so AJIVE's
+    three phases close over the coefficient space:
+
+      Phase 1  per-view orthonormal scores from the r×r Gram ``ṽᵀṽ``
+               (right: scores ``ṽ W Λ^{-1/2}`` ∈ R^{m×r}; left: scores are
+               the r×r eigenvectors themselves — B cancels).
+      Phase 2  joint basis from the (C·r)×(C·r) Gram of the stacked scores.
+      Phase 3  per-view joint component ``J̃^i = U U^T ṽ^i`` — two skinny
+               GEMMs; the ambient (m, n) view and the (n, n) projector are
+               never formed.
+
+    v_stack: (C, m, r) right | (C, r, n) left — the uplink payload as-is.
+    Returns the weighted joint estimate **in projected shape** ((m, r) or
+    (r, n)); lifting it with B reproduces dense ``ajive_sync`` output (for a
+    shared basis), and re-basing onto next round's basis is the r×r transfer
+    ``projector.reproject``. Stacked scan blocks (C, nb, ·, r) vmap over nb.
+
+    Parity with the dense oracle is defined for **full-rank** ṽ. Rank-
+    deficient views have no well-defined Phase-1 score directions in either
+    implementation; here the numerically-null eigendirections are zeroed
+    (rank-revealing floor) where the dense SVD would return arbitrary noise
+    directions — graceful degradation, but not bit-parity.
+    """
+    if v_stack.ndim == 4:                          # stacked scan blocks
+        return jax.vmap(
+            lambda vs: ajive_sync_factored(vs, rank, weights, side),
+            in_axes=1, out_axes=0)(v_stack)
+
+    a = v_stack.astype(jnp.float32)                # (C, m, r) | (C, r, n)
+    c_views = a.shape[0]
+    r = a.shape[-1] if side == "right" else a.shape[-2]
+    k = min(rank, r)
+
+    if side == "right":
+        # Phase 1: per-view economy SVD via the r×r Gram of ṽ^i.
+        gram = jnp.einsum("cmr,cms->crs", a, a)            # (C, r, r)
+        lam, wv = jax.vmap(lambda g: _topk_eig_desc(g, k))(gram)
+        scores = jnp.einsum("cmr,crk->cmk", a, wv)         # ṽ W
+        scores = scores * _inv_sqrt_rank_safe(lam)[:, None, :]
+        stacked = jnp.moveaxis(scores, 0, 1).reshape(a.shape[1], c_views * k)
+        u_joint = _factored_joint_scores(stacked, k)       # (m, k)
+        joint = jnp.einsum("mj,cjr->cmr", u_joint,
+                           jnp.einsum("mj,cmr->cjr", u_joint, a))
+    else:
+        # Left blocks: lifted scores are B·(eigvecs of ṽṽᵀ); the shared
+        # orthonormal B cancels from every Gram, so Phases 1–3 run wholly in
+        # the r-dimensional coefficient space.
+        gram = jnp.einsum("crn,csn->crs", a, a)            # (C, r, r)
+        _, wv = jax.vmap(lambda g: _topk_eig_desc(g, k))(gram)
+        stacked = jnp.moveaxis(wv, 0, 1).reshape(r, c_views * k)
+        q = _factored_joint_scores(stacked, k)             # (r, k)
+        joint = jnp.einsum("rj,cjn->crn", q,
+                           jnp.einsum("rj,crn->cjn", q, a))
+
+    return jnp.einsum("c,c...->...", normalize_weights(weights, c_views),
+                      joint)

@@ -83,6 +83,13 @@ class FedConfig:
     eps: float = 1e-8
     seed: int = 0
     reset_opt_each_round: bool = True  # 𝒮 'none' => reinit each round
+    # Fast paths (see galore / state_sync module docstrings). factored_sync
+    # synchronizes in projected coordinates under the shared-basis invariant
+    # of the seeded-broadcast protocol; False restores the dense per-client
+    # lift (the oracle, and the only correct path for heterogeneous bases).
+    fused: bool = True
+    use_pallas: Optional[bool] = None
+    factored_sync: bool = True
 
 
 # ------------------------------------------------------------ trainables ----
@@ -146,7 +153,8 @@ class FedEngine:
         self.galore_cfg = gal.GaloreConfig(
             rank=cfg.rank, refresh_every=10 ** 9,   # engine refreshes manually
             adaptive_steps=cfg.adaptive_refreshes, b1=cfg.b1, b2=cfg.b2,
-            eps=cfg.eps, refresh_mode="auto")
+            eps=cfg.eps, refresh_mode="auto", fused=cfg.fused,
+            use_pallas=cfg.use_pallas)
         self.tx = self._make_tx()
         self._local_train = jax.jit(jax.vmap(self._local_train_one,
                                              in_axes=(0, 0, 0)))
@@ -282,6 +290,22 @@ class FedEngine:
                                        self.cfg.rank)
 
     # -------------------------------------------------------------- 𝒮 -------
+    def _bases_shared(self) -> bool:
+        """Whether every client ended the round on the identical basis.
+
+        The only in-step refresh the engine permits fires at count == 0
+        (round 0, refresh_every is effectively ∞); with adaptive refreshes
+        enabled that refresh is data-driven from each client's *own* gradient,
+        so round-0 bases are client-specific and 𝒮 must take the dense
+        per-client lift. From round 1 on, every refresh is the seeded-random
+        broadcast (manual_refresh with grads=None) — bases are bit-identical
+        across clients and the factored path applies.
+        """
+        round0_adaptive = (self.round_idx == 0
+                           and self.galore_cfg.adaptive_steps > 0
+                           and self.galore_cfg.refresh_mode != "random")
+        return not round0_adaptive
+
     def _sync_states(self, stacked_opt_states, w):
         if self.spec.state_sync == "none" or self.spec.optimizer != "galore_adamw":
             self.synced_v = None
@@ -301,6 +325,16 @@ class FedEngine:
             rank = b_stack.shape[-1]
             side = proj.RIGHT if v_stack.shape[-1] == rank else proj.LEFT
 
+            if self.cfg.factored_sync and self._bases_shared():
+                # Shared-basis invariant (the seeded-broadcast protocol keeps
+                # every client on the identical round-k basis): synchronize
+                # directly on the projected ṽ — no (K, m, n) lift. The result
+                # stays on the round-k basis; manual_refresh applies the
+                # next-round transfer at InitState.
+                synced.append(sync_lib.sync_block_synced_factored(
+                    self.spec.state_sync, v_stack, side, w, rank))
+                continue
+
             def sync_one(v_cl, b_cl):
                 # v_cl (K, m, r)|(K, r, n); b_cl (K, dim, r). Lift each
                 # client's ṽ with its *own* basis (identical across clients
@@ -314,7 +348,8 @@ class FedEngine:
                     views = jnp.einsum("kmr,krn->kmn",
                                        b_cl.astype(jnp.float32),
                                        v_cl.astype(jnp.float32))
-                lifted = self._sync_lifted(views, w, rank)
+                lifted = sync_lib.sync_lifted_views(self.spec.state_sync,
+                                                    views, w, rank)
                 return sync_lib.project_state(lifted, b_cl[0], side)
 
             if v_stack.ndim == 4:        # stacked scan blocks (K, nb, ., r)
@@ -323,19 +358,6 @@ class FedEngine:
             else:
                 synced.append(sync_one(v_stack, b_stack))
         self.synced_v = jax.tree_util.tree_unflatten(treedef, synced)
-
-    def _sync_lifted(self, views, w, rank):
-        s = self.spec.state_sync
-        if s == "ajive":
-            from .ajive import ajive_sync
-            return ajive_sync(views, rank=rank, weights=w)
-        if s == "avg":
-            return jnp.einsum("k,kmn->mn", w, views)
-        if s == "avg_svd":
-            avg = jnp.einsum("k,kmn->mn", w, views)
-            u, sv, vt = jnp.linalg.svd(avg, full_matrices=False)
-            return (u[:, :rank] * sv[:rank][None, :]) @ vt[:rank]
-        raise ValueError(s)
 
     # ------------------------------------------------------------- helpers --
     def global_params(self) -> PyTree:

@@ -13,6 +13,17 @@ seed. Protocols:
 
 All return the *lifted* (n, n_cols) synchronized state; the caller re-projects
 onto each client's next-round basis (InitState, Eq. 5).
+
+Factored fast path: every protocol input has rank ≤ r, so the lift → sync →
+re-project round-trip closes over the projected coordinates.
+:func:`sync_block_factored` runs the same protocols without ever building a
+dense ``(m, n)`` view — weighted averaging commutes with the (linear) lift,
+rank-r SVD re-projection of a rank-≤r lift is the identity (making
+``avg_svd`` ≡ ``avg`` in factored form), AJIVE runs on the (C·r) score space
+(`ajive.ajive_sync_factored`), and the old→new basis change is the r×r
+transfer ``projector.reproject``. Requires the shared-basis invariant of the
+seeded-broadcast protocol (Appendix D); the dense :func:`sync_block` is the
+oracle for heterogeneous bases and parity tests.
 """
 from __future__ import annotations
 
@@ -21,7 +32,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from .ajive import ajive_sync
+from .ajive import ajive_sync, ajive_sync_factored, normalize_weights
 from . import projector as proj
 
 PyTree = Any
@@ -47,9 +58,7 @@ def sync_none(v_stack, basis, side, weights=None, rank: Optional[int] = None):
 
 
 def sync_avg(v_stack, basis, side, weights=None, rank: Optional[int] = None):
-    k = v_stack.shape[0]
-    w = (jnp.full((k,), 1.0 / k) if weights is None
-         else jnp.asarray(weights, jnp.float32) / jnp.sum(weights))
+    w = normalize_weights(weights, v_stack.shape[0])
     views = lift_views(v_stack.astype(jnp.float32), basis, side)
     return jnp.einsum("k,kmn->mn", w, views)
 
@@ -77,13 +86,69 @@ SYNC_PROTOCOLS = {
 }
 
 
+def sync_lifted_views(protocol: str, views: jnp.ndarray, weights=None,
+                      rank: Optional[int] = None) -> jnp.ndarray:
+    """Run protocol 𝒮 on *already-lifted* (k, m, n) views — the dense
+    reference dispatch shared by the engine and the sharded runtime (used
+    when clients lifted with heterogeneous bases, where the factored path
+    does not apply)."""
+    if protocol == "ajive":
+        return ajive_sync(views, rank=rank, weights=weights)
+    avg = jnp.einsum("k,kmn->mn", normalize_weights(weights, views.shape[0]),
+                     views)
+    if protocol == "avg":
+        return avg
+    if protocol == "avg_svd":
+        u, s, vt = jnp.linalg.svd(avg, full_matrices=False)
+        return (u[:, :rank] * s[:rank][None, :]) @ vt[:rank]
+    raise ValueError(protocol)
+
+
 def sync_block(protocol: str, v_stack: jnp.ndarray, old_basis: jnp.ndarray,
                new_basis: jnp.ndarray, side: str, weights=None,
                rank: Optional[int] = None) -> Optional[jnp.ndarray]:
     """One adapted block end-to-end: lift with the round-k basis, synchronize,
     re-project onto the round-(k+1) basis. Returns the next-round ṽ init, or
-    None for protocol='none' (clients zero-init)."""
+    None for protocol='none' (clients zero-init).
+
+    This is the dense reference path (materializes (k, m, n) views); the
+    production round loop uses :func:`sync_block_factored`.
+    """
     lifted = SYNC_PROTOCOLS[protocol](v_stack, old_basis, side, weights, rank)
     if lifted is None:
         return None
     return jnp.maximum(project_state(lifted, new_basis, side), 0.0)
+
+
+def sync_block_synced_factored(protocol: str, v_stack: jnp.ndarray, side: str,
+                               weights=None,
+                               rank: Optional[int] = None
+                               ) -> Optional[jnp.ndarray]:
+    """Run protocol 𝒮 in projected coordinates (no lift): returns the synced
+    state expressed on the *round-k* basis, or None for 'none'."""
+    if protocol == "none":
+        return None
+    if protocol in ("avg", "avg_svd"):
+        # Lift is linear ⇒ averaging commutes with it; the rank-r SVD
+        # re-projection in avg_svd is the identity on a rank-≤r lift.
+        w = normalize_weights(weights, v_stack.shape[0])
+        return jnp.einsum("k,k...->...", w, v_stack.astype(jnp.float32))
+    if protocol == "ajive":
+        r = rank if rank is not None else (
+            v_stack.shape[-1] if side == proj.RIGHT else v_stack.shape[-2])
+        return ajive_sync_factored(v_stack, rank=r, weights=weights, side=side)
+    raise ValueError(protocol)
+
+
+def sync_block_factored(protocol: str, v_stack: jnp.ndarray,
+                        old_basis: jnp.ndarray, new_basis: jnp.ndarray,
+                        side: str, weights=None,
+                        rank: Optional[int] = None) -> Optional[jnp.ndarray]:
+    """Factored counterpart of :func:`sync_block`: synchronize in projected
+    coordinates, then change basis with the r×r transfer — the dense (m, n)
+    lift is never built. Assumes the shared-basis invariant (all clients hold
+    the same seeded round-k basis)."""
+    synced = sync_block_synced_factored(protocol, v_stack, side, weights, rank)
+    if synced is None:
+        return None
+    return jnp.maximum(proj.reproject(synced, old_basis, new_basis, side), 0.0)

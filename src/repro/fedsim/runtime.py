@@ -5,8 +5,15 @@ tensor-parallel over the model axis; the frozen base is FSDP-sharded
 (identical across clients). One `round_step` call runs T local GaLoreAdamW
 steps per client (lax.scan), FedAvg-aggregates via an all-reduce over the
 client axes, and returns the uploaded projected second moments ṽ. The
-server-side AJIVE filter (Algorithm 1, line 12) then runs per adapted block
+server-side state filter (Algorithm 1, line 12) then runs per adapted block
 and the synchronized state is installed for the next round.
+
+The server sync runs **factored** by default: the uplinked ṽ are synchronized
+directly in projected coordinates (`state_sync.sync_block_synced_factored`),
+so the round loop never materializes a dense ``(C, m, n)`` lifted view, an
+``(n, n)`` joint projector, or a dense per-client broadcast — the installed
+state is the O(dim·r) projected buffer. ``factored_sync=False`` restores the
+dense lift (the parity oracle).
 
 This is the production counterpart of core.fed.FedEngine (which vmaps
 clients on a single host).
@@ -22,7 +29,7 @@ import jax.numpy as jnp
 from ..configs.base import ArchConfig
 from ..core import galore as gal
 from ..core import projector as proj
-from ..core.ajive import ajive_sync
+from ..core import state_sync as sync_lib
 from ..launch import steps as steps_lib
 
 PyTree = Any
@@ -30,12 +37,14 @@ PyTree = Any
 
 class ShardedFederation:
     def __init__(self, cfg: ArchConfig, spec: steps_lib.TrainSpec, mesh,
-                 n_clients: int, state_sync: str = "ajive", seed: int = 0):
+                 n_clients: int, state_sync: str = "ajive", seed: int = 0,
+                 factored_sync: bool = True):
         self.cfg = cfg
         self.spec = spec
         self.mesh = mesh
         self.n_clients = n_clients
         self.state_sync = state_sync
+        self.factored_sync = factored_sync
         self.round_idx = 0
 
         key = jax.random.PRNGKey(seed)
@@ -86,26 +95,49 @@ class ShardedFederation:
                 continue
             rank = b_stack.shape[-1]
             side = proj.RIGHT if v_stack.shape[-1] == rank else proj.LEFT
-            basis0 = jax.tree_util.tree_map(lambda x: x[0], b_stack)
 
-            def sync_one(v_cl, basis):
-                # v_cl (C, m, r) | (C, r, n); basis (dim, r) shared (seeded)
-                if side == proj.RIGHT:
-                    views = jnp.einsum("kmr,nr->kmn", v_cl, basis)
-                else:
-                    views = jnp.einsum("mr,krn->kmn", basis, v_cl)
-                lifted = ajive_sync(views.astype(jnp.float32), rank=rank,
-                                    weights=w)
-                if side == proj.RIGHT:
-                    return jnp.maximum(lifted @ basis, 0.0)
-                return jnp.maximum(basis.T @ lifted, 0.0)
-
-            if v_stack.ndim == 4:     # stacked scan blocks: (C, nb, ., r)
-                synced = jax.vmap(sync_one, in_axes=(1, 0))(
-                    v_stack, basis0)
+            if self.factored_sync and self._bases_shared():
+                # Factored 𝒮: sync the (C, ., r) uplink directly; the shared
+                # seeded basis cancels, so no (C, m, n) lift and no (n, n)
+                # projector. Result is the O(dim·r) projected state.
+                synced = jnp.maximum(sync_lib.sync_block_synced_factored(
+                    self.state_sync, v_stack, side, w, rank), 0.0)
             else:
-                synced = sync_one(v_stack, basis0)
-            # broadcast the synchronized state to every client slot
+                synced = self._dense_sync_block(v_stack, b_stack, w, rank,
+                                                side)
+            # every client slot shares the synced projected state (a
+            # broadcast view of the O(dim·r) buffer, not a dense tensor)
             out.append(jnp.broadcast_to(
                 synced[None], (self.n_clients,) + synced.shape))
         return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _bases_shared(self) -> bool:
+        """The factored sync requires every client on the identical basis.
+        With the production ``refresh_mode='random'`` (or 'auto' with zero
+        adaptive steps, which never takes the data branch) every in-step
+        refresh is seeded-random from the broadcast seed — shared by
+        construction. 'svd' refreshes from each client's own gradient, so
+        bases diverge and the sync must take the per-client dense lift."""
+        return self.spec.refresh_mode != "svd"
+
+    def _dense_sync_block(self, v_stack, b_stack, w, rank, side):
+        """Dense reference 𝒮 (parity oracle): lift each client's ṽ with its
+        *own* end-of-round basis (correct under diverged bases), run the
+        configured protocol on the lifted views, re-project onto the
+        client-0 basis."""
+        def sync_one(v_cl, b_cl):
+            # v_cl (C, m, r) | (C, r, n); b_cl (C, dim, r)
+            v32 = v_cl.astype(jnp.float32)
+            b32 = b_cl.astype(jnp.float32)
+            if side == proj.RIGHT:
+                views = jnp.einsum("kmr,knr->kmn", v32, b32)
+            else:
+                views = jnp.einsum("kmr,krn->kmn", b32, v32)
+            lifted = sync_lib.sync_lifted_views(self.state_sync, views, w,
+                                                rank)
+            return jnp.maximum(
+                sync_lib.project_state(lifted, b_cl[0], side), 0.0)
+
+        if v_stack.ndim == 4:         # stacked scan blocks: (C, nb, ., r)
+            return jax.vmap(sync_one, in_axes=(1, 1))(v_stack, b_stack)
+        return sync_one(v_stack, b_stack)

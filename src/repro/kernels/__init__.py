@@ -9,6 +9,8 @@
 holds the pure-jnp oracles the tests assert against.
 """
 from . import ops, ref
-from .ops import flash_attention, galore_adamw_step, rwkv6_scan
+from .ops import (flash_attention, galore_adamw_step, galore_precond_step,
+                  rwkv6_scan)
 
-__all__ = ["ops", "ref", "flash_attention", "galore_adamw_step", "rwkv6_scan"]
+__all__ = ["ops", "ref", "flash_attention", "galore_adamw_step",
+           "galore_precond_step", "rwkv6_scan"]

@@ -1,21 +1,43 @@
-"""Fused GaLoreAdamW Pallas TPU kernel.
+"""Fused GaLoreAdamW Pallas TPU kernels.
 
 On GPU, GaLore is three GEMMs + elementwise ops with HBM round-trips between
-them (project -> Adam update -> project-back -> weight update). This kernel
-fuses the whole optimizer step for one weight block into a single VMEM-
-resident pass, tiled over rows of the block:
+them (project -> Adam update -> project-back -> weight update). These kernels
+fuse the whole optimizer step for one weight block into a single VMEM-
+resident pass, tiled over the block's long axis:
 
-  per row-tile i (bm × N):
-    g̃  = g_i @ B            (MXU;  B (N, r) stays resident across the grid)
+  right-projected block (basis B (N, r), moments (M, r)), per row-tile (bm, N):
+    g̃  = g_i @ B            (MXU;  B stays resident across the grid)
     m̃  = β₁ m̃ + (1-β₁) g̃     (VPU)
     ṽ  = β₂ ṽ + (1-β₂) g̃²    (VPU)
     ũ  = m̂ / (√v̂ + ε)        (VPU, bias-corrected)
     u  = ũ @ Bᵀ              (MXU)
     w_i ← w_i − η u − η λ w_i
 
-HBM traffic: read w, g once; write w once; m̃/ṽ are O(M·r) — the dense (M, N)
-gradient never round-trips between optimizer stages. Tile sizes are MXU/VPU
-aligned (bm multiple of 8, N and r padded to 128 by the caller when needed).
+  left-projected block (basis B (M, r), moments (r, N)) is the transpose
+  problem: the grid tiles *columns* (M, bn) and the two GEMMs become
+  g̃ = Bᵀ g_j and u = B ũ, with B resident.
+
+HBM traffic: read w, g once; write w once; m̃/ṽ are O(long_dim·r) — the dense
+(M, N) gradient never round-trips between optimizer stages.
+
+Grid handling: the tile count is ``ceil(dim / block)`` (``pl.cdiv``) — the
+trailing partial tile is masked by Pallas block clipping (out-of-range reads
+are padded, out-of-range writes dropped; every output element depends only on
+its own row/column tile, so padding never contaminates valid lanes). There is
+no divisibility requirement on M or N.
+
+Two entry points:
+
+* :func:`galore_adamw_step` — the full fused step ``(w, m, v) -> (w', m', v')``
+  including the ambient AdamW weight update (lr + decoupled weight decay).
+* :func:`galore_precond_step` — the preconditioning-only variant
+  ``(g, m, v) -> (u, m', v')`` returning the ambient update direction; this is
+  what ``core.galore.scale_by_galore`` wires into its chained-transformation
+  hot path (weight decay / lr are applied by the rest of the chain).
+
+Both accept stacked 3-D blocks ``(nb, M, N)`` (per-layer bases/moments with a
+leading layer dim) by vmapping the 2-D kernel — under ``jax.vmap`` the batch
+dim becomes an extra grid dimension, not a Python loop.
 """
 from __future__ import annotations
 
@@ -25,68 +47,177 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+RIGHT = "right"
+LEFT = "left"
 
-def _galore_kernel(count_ref, w_ref, g_ref, basis_ref, m_ref, v_ref,
-                   w_out, m_out, v_out, *, b1, b2, eps, lr, weight_decay):
-    g = g_ref[...].astype(jnp.float32)            # (bm, N)
-    basis = basis_ref[...].astype(jnp.float32)    # (N, r)
-    gt = jnp.dot(g, basis, preferred_element_type=jnp.float32)   # (bm, r)
 
+def _adam_update(gt, m_ref, v_ref, count_ref, b1, b2, eps, bias_correction):
+    """Shared Adam moment update + (optionally bias-corrected) direction."""
     m = b1 * m_ref[...] + (1.0 - b1) * gt
     v = b2 * v_ref[...] + (1.0 - b2) * gt * gt
+    if bias_correction:
+        c = count_ref[0, 0]
+        c1 = 1.0 - b1 ** c
+        c2 = 1.0 - b2 ** c
+    else:
+        c1 = c2 = 1.0
+    ut = (m / c1) / (jnp.sqrt(v / c2) + eps)
+    return m, v, ut
 
-    c = count_ref[0, 0]
-    c1 = 1.0 - b1 ** c
-    c2 = 1.0 - b2 ** c
-    ut = (m / c1) / (jnp.sqrt(v / c2) + eps)      # (bm, r)
 
-    u = jnp.dot(ut, basis.T, preferred_element_type=jnp.float32)  # (bm, N)
+def _project(g, basis, side):
+    if side == RIGHT:
+        return jnp.dot(g, basis, preferred_element_type=jnp.float32)
+    return jnp.dot(basis.T, g, preferred_element_type=jnp.float32)
+
+
+def _project_back(ut, basis, side):
+    if side == RIGHT:
+        return jnp.dot(ut, basis.T, preferred_element_type=jnp.float32)
+    return jnp.dot(basis, ut, preferred_element_type=jnp.float32)
+
+
+def _step_kernel(count_ref, w_ref, g_ref, basis_ref, m_ref, v_ref,
+                 w_out, m_out, v_out, *, side, b1, b2, eps, lr, weight_decay,
+                 bias_correction):
+    g = g_ref[...].astype(jnp.float32)
+    basis = basis_ref[...].astype(jnp.float32)
+    gt = _project(g, basis, side)
+    m, v, ut = _adam_update(gt, m_ref, v_ref, count_ref, b1, b2, eps,
+                            bias_correction)
+    u = _project_back(ut, basis, side)
     w = w_ref[...].astype(jnp.float32)
     w_out[...] = (w - lr * u - lr * weight_decay * w).astype(w_out.dtype)
     m_out[...] = m
     v_out[...] = v
 
 
-@functools.partial(jax.jit, static_argnames=("b1", "b2", "eps", "lr",
+def _precond_kernel(count_ref, g_ref, basis_ref, m_ref, v_ref,
+                    u_out, m_out, v_out, *, side, b1, b2, eps,
+                    bias_correction):
+    g = g_ref[...].astype(jnp.float32)
+    basis = basis_ref[...].astype(jnp.float32)
+    gt = _project(g, basis, side)
+    m, v, ut = _adam_update(gt, m_ref, v_ref, count_ref, b1, b2, eps,
+                            bias_correction)
+    u_out[...] = _project_back(ut, basis, side)
+    m_out[...] = m
+    v_out[...] = v
+
+
+def infer_side(w_shape, basis_shape, m_shape) -> str:
+    """Recover the projection side from buffer shapes (Appendix A.1 layout:
+    right ⇒ basis (N, r), moments (M, r); left ⇒ basis (M, r), moments (r, N)).
+    Square blocks with r == M are genuinely ambiguous and default to right —
+    the ``proj_type=std`` convention."""
+    mm, nn = w_shape[-2:]
+    dim, r = basis_shape[-2:]
+    if dim == nn and m_shape[-2:] == (mm, r):
+        return RIGHT
+    if dim == mm and m_shape[-2:] == (r, nn):
+        return LEFT
+    raise ValueError(f"inconsistent galore shapes: w {w_shape}, "
+                     f"basis {basis_shape}, m {m_shape}")
+
+
+def _block_specs(side, mm, nn, r, block):
+    """Grid + BlockSpecs for one 2-D block. ``block`` tiles rows (right) or
+    columns (left); the grid is ceil-div so non-divisible dims get a masked
+    tail tile instead of an assertion."""
+    if side == RIGHT:
+        bm = min(block, mm)
+        grid = (pl.cdiv(mm, bm),)
+        wg = pl.BlockSpec((bm, nn), lambda i: (i, 0))
+        basis = pl.BlockSpec((nn, r), lambda i: (0, 0))
+        mv = pl.BlockSpec((bm, r), lambda i: (i, 0))
+    else:
+        bn = min(block, nn)
+        grid = (pl.cdiv(nn, bn),)
+        wg = pl.BlockSpec((mm, bn), lambda j: (0, j))
+        basis = pl.BlockSpec((mm, r), lambda j: (0, 0))
+        mv = pl.BlockSpec((r, bn), lambda j: (0, j))
+    return grid, wg, basis, mv
+
+
+@functools.partial(jax.jit, static_argnames=("side", "b1", "b2", "eps", "lr",
                                              "weight_decay", "block_rows",
-                                             "interpret"))
-def galore_adamw_step(w, g, basis, m, v, count, *, b1=0.9, b2=0.999,
+                                             "interpret", "bias_correction"))
+def galore_adamw_step(w, g, basis, m, v, count, *, side=None, b1=0.9, b2=0.999,
                       eps=1e-8, lr=1e-3, weight_decay=0.0,
-                      block_rows=128, interpret=False):
-    """One fused step for a right-projected block.
+                      block_rows=128, interpret=False, bias_correction=True):
+    """One fused GaLoreAdamW step for a projected block.
 
-    w, g (M, N); basis (N, r); m, v (M, r) fp32; count scalar (post-increment
-    step for bias correction). Returns (w_new, m_new, v_new).
+    Right side: w, g (M, N); basis (N, r); m, v (M, r) fp32.
+    Left side:  w, g (M, N); basis (M, r); m, v (r, N) fp32.
+    Stacked 3-D blocks carry a leading layer dim on every buffer.
+    count = post-increment step (bias correction). Returns (w', m', v').
     """
-    mm, nn = w.shape
-    r = basis.shape[1]
-    bm = min(block_rows, mm)
-    assert mm % bm == 0, f"M={mm} must divide block_rows={bm}"
-    grid = (mm // bm,)
+    side = side or infer_side(w.shape, basis.shape, m.shape)
+    if w.ndim > 2:
+        fn = functools.partial(galore_adamw_step, side=side, b1=b1, b2=b2,
+                               eps=eps, lr=lr, weight_decay=weight_decay,
+                               block_rows=block_rows, interpret=interpret,
+                               bias_correction=bias_correction)
+        return jax.vmap(lambda ww, gg, bb, mm_, vv: fn(ww, gg, bb, mm_, vv,
+                                                       count))(w, g, basis, m, v)
 
+    mm, nn = w.shape
+    r = basis.shape[-1]
+    grid, wg_spec, basis_spec, mv_spec = _block_specs(side, mm, nn, r,
+                                                      block_rows)
     count_arr = jnp.full((1, 1), count, jnp.float32)
-    kernel = functools.partial(_galore_kernel, b1=b1, b2=b2, eps=eps, lr=lr,
-                               weight_decay=weight_decay)
+    kernel = functools.partial(_step_kernel, side=side, b1=b1, b2=b2, eps=eps,
+                               lr=lr, weight_decay=weight_decay,
+                               bias_correction=bias_correction)
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),        # count (SMEM-like)
-            pl.BlockSpec((bm, nn), lambda i: (i, 0)),      # w tile
-            pl.BlockSpec((bm, nn), lambda i: (i, 0)),      # g tile
-            pl.BlockSpec((nn, r), lambda i: (0, 0)),       # basis (resident)
-            pl.BlockSpec((bm, r), lambda i: (i, 0)),       # m tile
-            pl.BlockSpec((bm, r), lambda i: (i, 0)),       # v tile
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, nn), lambda i: (i, 0)),
-            pl.BlockSpec((bm, r), lambda i: (i, 0)),
-            pl.BlockSpec((bm, r), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((mm, nn), w.dtype),
-            jax.ShapeDtypeStruct((mm, r), jnp.float32),
-            jax.ShapeDtypeStruct((mm, r), jnp.float32),
-        ],
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),  # count (SMEM-like)
+                  wg_spec, wg_spec, basis_spec, mv_spec, mv_spec],
+        out_specs=[wg_spec, mv_spec, mv_spec],
+        out_shape=[jax.ShapeDtypeStruct(w.shape, w.dtype),
+                   jax.ShapeDtypeStruct(m.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(v.shape, jnp.float32)],
         interpret=interpret,
     )(count_arr, w, g, basis, m, v)
+
+
+@functools.partial(jax.jit, static_argnames=("side", "b1", "b2", "eps",
+                                             "block_rows", "interpret",
+                                             "bias_correction"))
+def galore_precond_step(g, basis, m, v, count, *, side=None, b1=0.9, b2=0.999,
+                        eps=1e-8, block_rows=128, interpret=False,
+                        bias_correction=True):
+    """Fused project → Adam → project-back, returning the ambient update
+    direction u (fp32) instead of applying it — the ``scale_by_galore`` hot
+    path (lr / weight decay live elsewhere in the optimizer chain).
+
+    Shapes as :func:`galore_adamw_step`; returns (u (M, N) fp32, m', v').
+    """
+    side = side or infer_side(g.shape, basis.shape, m.shape)
+    if g.ndim > 2:
+        fn = functools.partial(galore_precond_step, side=side, b1=b1, b2=b2,
+                               eps=eps, block_rows=block_rows,
+                               interpret=interpret,
+                               bias_correction=bias_correction)
+        return jax.vmap(lambda gg, bb, mm_, vv: fn(gg, bb, mm_, vv,
+                                                   count))(g, basis, m, v)
+
+    mm, nn = g.shape[-2:]
+    r = basis.shape[-1]
+    grid, wg_spec, basis_spec, mv_spec = _block_specs(side, mm, nn, r,
+                                                      block_rows)
+    count_arr = jnp.full((1, 1), count, jnp.float32)
+    kernel = functools.partial(_precond_kernel, side=side, b1=b1, b2=b2,
+                               eps=eps, bias_correction=bias_correction)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                  wg_spec, basis_spec, mv_spec, mv_spec],
+        out_specs=[wg_spec, mv_spec, mv_spec],
+        out_shape=[jax.ShapeDtypeStruct(g.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(m.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(v.shape, jnp.float32)],
+        interpret=interpret,
+    )(count_arr, g, basis, m, v)

@@ -10,6 +10,7 @@ import jax
 
 from .flash_attention import flash_attention as _flash
 from .galore_adamw import galore_adamw_step as _galore
+from .galore_adamw import galore_precond_step as _galore_precond
 from .rwkv6_scan import rwkv6_scan as _rwkv6
 
 
@@ -26,6 +27,11 @@ def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
 def galore_adamw_step(w, g, basis, m, v, count, **kw):
     kw.setdefault("interpret", _interpret())
     return _galore(w, g, basis, m, v, count, **kw)
+
+
+def galore_precond_step(g, basis, m, v, count, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _galore_precond(g, basis, m, v, count, **kw)
 
 
 def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk=128):

@@ -68,6 +68,12 @@ class TrainSpec:
     local_steps: int = 8                # T (round step only)
     seed: int = 0
     refresh_mode: str = "random"        # production steady-state step
+    # Fused/bucketed GaLore execution (core.galore module docstring):
+    # fused=True batches same-shape target blocks per step; use_pallas=None
+    # auto-selects the fused Pallas kernel on TPU (interpret fallback on CPU
+    # when forced True).
+    fused: bool = True
+    use_pallas: Optional[bool] = None
     # Mesh axes carrying the client dimension. jax.vmap(spmd_axis_name=...)
     # pins every per-client intermediate's leading dim to these axes —
     # without it SPMD replicated the client dim across the data axis
@@ -77,7 +83,8 @@ class TrainSpec:
 
 def make_galore_tx(cfg: ArchConfig, spec: TrainSpec):
     gcfg = gal.GaloreConfig(rank=spec.rank, refresh_every=spec.refresh_every,
-                            adaptive_steps=0, refresh_mode=spec.refresh_mode)
+                            adaptive_steps=0, refresh_mode=spec.refresh_mode,
+                            fused=spec.fused, use_pallas=spec.use_pallas)
     return gal.galore_adamw(gcfg, spec.lr, spec.weight_decay,
                             target_fn=lambda p, l: True,  # trainable tree is
                             seed=spec.seed,               # already filtered

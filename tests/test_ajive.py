@@ -2,7 +2,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.ajive import ajive, ajive_sync
+from repro.core import projector as proj
+from repro.core.ajive import ajive, ajive_sync, ajive_sync_factored
 
 
 def _make_views(key, k_views=6, n=48, m=48, r=5, drift_rank=2, noise=0.05,
@@ -74,3 +75,79 @@ def test_more_clients_improve_recovery():
         errs.append(float(jnp.linalg.norm(res.joint_mean - joint)
                           / jnp.linalg.norm(joint)))
     assert errs[1] < errs[0]
+
+
+# ------------------------------------------------------ factored fast path --
+
+def _make_projected_views(key, side, c_views=6, m=48, n=32, r=8):
+    """Random rank-r projected moments ṽ with shared structure + drift, plus
+    the shared orthonormal lifting basis. O(1) magnitudes and a graded
+    spectrum keep fp32 SVD noise well inside the 1e-5 parity tolerance."""
+    k1, k2 = jax.random.split(key)
+    dim = n if side == "right" else m
+    basis = proj.random_basis(0, dim, r)
+    scale = jnp.linspace(1.6, 0.8, r)
+    if side == "right":
+        shared = jax.random.normal(k1, (m, r)) * scale[None, :]
+        vs = [shared + 0.08 * jax.random.normal(jax.random.fold_in(k2, i),
+                                                (m, r))
+              for i in range(c_views)]
+    else:
+        shared = scale[:, None] * jax.random.normal(k1, (r, n))
+        vs = [shared + 0.08 * jax.random.normal(jax.random.fold_in(k2, i),
+                                                (r, n))
+              for i in range(c_views)]
+    return jnp.stack(vs), basis
+
+
+def _lift(v_stack, basis, side):
+    if side == "right":
+        return jnp.einsum("cmr,nr->cmn", v_stack, basis)
+    return jnp.einsum("mr,crn->cmn", basis, v_stack)
+
+
+@pytest.mark.parametrize("side", ["right", "left"])
+def test_factored_matches_dense_on_rank_r_views(side):
+    """ajive_sync_factored lifted with the shared basis must equal the dense
+    ajive_sync on the lifted views (the retained oracle) to ≤1e-5."""
+    v_stack, basis = _make_projected_views(jax.random.PRNGKey(0), side)
+    views = _lift(v_stack, basis, side)
+    dense = ajive_sync(views, rank=8)
+    fact = ajive_sync_factored(v_stack, rank=8, side=side)
+    lifted = (jnp.einsum("mr,nr->mn", fact, basis) if side == "right"
+              else basis @ fact)
+    assert jnp.allclose(lifted, dense, atol=1e-5, rtol=1e-5)
+
+
+def test_factored_weighted_matches_dense():
+    v_stack, basis = _make_projected_views(jax.random.PRNGKey(1), "right")
+    w = jnp.array([1, 1, 2, 1, 1, 3.0])
+    dense = ajive_sync(_lift(v_stack, basis, "right"), rank=8, weights=w)
+    fact = ajive_sync_factored(v_stack, rank=8, weights=w)
+    assert jnp.allclose(jnp.einsum("mr,nr->mn", fact, basis), dense,
+                        atol=1e-5)
+
+
+def test_factored_stacked_blocks():
+    """Stacked scan blocks (C, nb, m, r) vmap over the layer dim."""
+    stacks = [_make_projected_views(jax.random.PRNGKey(i), "right")
+              for i in range(2)]
+    v4 = jnp.stack([s[0] for s in stacks], axis=1)       # (C, nb, m, r)
+    out = ajive_sync_factored(v4, rank=8)
+    assert out.shape == (2, 48, 8)
+    for i, (v_stack, basis) in enumerate(stacks):
+        single = ajive_sync_factored(v_stack, rank=8)
+        assert jnp.allclose(out[i], single, atol=1e-6)
+
+
+def test_factored_never_materializes_dense(monkeypatch):
+    """The factored path must not call the dense ajive pipeline at all."""
+    import repro.core.ajive as aj
+
+    def boom(*a, **k):
+        raise AssertionError("dense ajive called from factored path")
+
+    monkeypatch.setattr(aj, "ajive", boom)
+    v_stack, _ = _make_projected_views(jax.random.PRNGKey(2), "right")
+    out = aj.ajive_sync_factored(v_stack, rank=8)
+    assert out.shape == (48, 8)

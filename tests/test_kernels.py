@@ -39,6 +39,84 @@ class TestGaloreKernel:
         b = ops.galore_adamw_step(w, g, basis, mm, vv, 1.0, block_rows=256)
         assert jnp.allclose(a[0], b[0], atol=1e-5)
 
+    @pytest.mark.parametrize("m,block_rows", [(96, 64), (100, 32), (7, 8)])
+    def test_odd_rows_masked_tail(self, m, block_rows):
+        """Row counts that don't divide block_rows run on a ceil-div grid
+        with a masked tail tile (regression for the old hard assert)."""
+        n, r = 256, 8
+        ks = jax.random.split(KEY, 5)
+        w = jax.random.normal(ks[0], (m, n))
+        g = jax.random.normal(ks[1], (m, n))
+        basis = jnp.linalg.qr(jax.random.normal(ks[2], (n, r)))[0]
+        mm = 0.1 * jax.random.normal(ks[3], (m, r), jnp.float32)
+        vv = 0.01 * jnp.abs(jax.random.normal(ks[4], (m, r), jnp.float32))
+        out_k = ops.galore_adamw_step(w, g, basis, mm, vv, 5.0, lr=1e-2,
+                                      weight_decay=0.01,
+                                      block_rows=block_rows)
+        out_r = ref.galore_adamw_ref(w, g, basis, mm, vv, count=5.0, lr=1e-2,
+                                     weight_decay=0.01)
+        for a, b in zip(out_k, out_r):
+            assert jnp.allclose(a, b, atol=1e-5), (m, block_rows)
+
+    @pytest.mark.parametrize("m,n,block", [(64, 200, 64), (32, 256, 128)])
+    def test_left_projected_block(self, m, n, block):
+        """Left blocks (m < n): basis (m, r), moments (r, n), column tiling."""
+        r = 8
+        ks = jax.random.split(KEY, 5)
+        w = jax.random.normal(ks[0], (m, n))
+        g = jax.random.normal(ks[1], (m, n))
+        basis = jnp.linalg.qr(jax.random.normal(ks[2], (m, r)))[0]
+        mm = 0.1 * jax.random.normal(ks[3], (r, n), jnp.float32)
+        vv = 0.01 * jnp.abs(jax.random.normal(ks[4], (r, n), jnp.float32))
+        out_k = ops.galore_adamw_step(w, g, basis, mm, vv, 3.0, lr=1e-2,
+                                      weight_decay=0.01, block_rows=block)
+        gt = basis.T @ g
+        m_new = 0.9 * mm + 0.1 * gt
+        v_new = 0.999 * vv + 0.001 * gt * gt
+        ut = (m_new / (1 - 0.9 ** 3.0)) / (
+            jnp.sqrt(v_new / (1 - 0.999 ** 3.0)) + 1e-8)
+        u = basis @ ut
+        w_ref = w - 1e-2 * u - 1e-2 * 0.01 * w
+        for a, b in zip(out_k, (w_ref, m_new, v_new)):
+            assert jnp.allclose(a, b, atol=1e-5), (m, n, block)
+
+    def test_stacked_3d_blocks(self):
+        """Stacked scan blocks (nb, m, n) match per-layer 2-D calls."""
+        nb, m, n, r = 3, 96, 128, 8
+        ks = jax.random.split(KEY, 5)
+        w = jax.random.normal(ks[0], (nb, m, n))
+        g = jax.random.normal(ks[1], (nb, m, n))
+        basis = jnp.stack([jnp.linalg.qr(jax.random.normal(
+            jax.random.fold_in(ks[2], i), (n, r)))[0] for i in range(nb)])
+        mm = 0.1 * jax.random.normal(ks[3], (nb, m, r), jnp.float32)
+        vv = 0.01 * jnp.abs(jax.random.normal(ks[4], (nb, m, r), jnp.float32))
+        out = ops.galore_adamw_step(w, g, basis, mm, vv, 2.0, lr=1e-2,
+                                    block_rows=64)
+        for i in range(nb):
+            exp = ref.galore_adamw_ref(w[i], g[i], basis[i], mm[i], vv[i],
+                                       count=2.0, lr=1e-2)
+            for a, b in zip(out, exp):
+                assert jnp.allclose(a[i], b, atol=1e-5), i
+
+    def test_precond_matches_full_step(self):
+        """galore_precond_step returns the same moments and an update u with
+        w - lr*u == the full step's weight output (weight_decay=0)."""
+        m, n, r = 96, 256, 8
+        ks = jax.random.split(KEY, 5)
+        w = jax.random.normal(ks[0], (m, n))
+        g = jax.random.normal(ks[1], (m, n))
+        basis = jnp.linalg.qr(jax.random.normal(ks[2], (n, r)))[0]
+        mm = 0.1 * jax.random.normal(ks[3], (m, r), jnp.float32)
+        vv = 0.01 * jnp.abs(jax.random.normal(ks[4], (m, r), jnp.float32))
+        lr = 1e-2
+        w_new, m_full, v_full = ops.galore_adamw_step(
+            w, g, basis, mm, vv, 5.0, lr=lr, weight_decay=0.0, block_rows=64)
+        u, m_pre, v_pre = ops.galore_precond_step(g, basis, mm, vv, 5.0,
+                                                  block_rows=64)
+        assert jnp.allclose(m_pre, m_full, atol=1e-6)
+        assert jnp.allclose(v_pre, v_full, atol=1e-6)
+        assert jnp.allclose(w - lr * u, w_new, atol=1e-5)
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize("lq,lk,h,hkv,d", [

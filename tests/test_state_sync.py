@@ -59,3 +59,50 @@ def test_left_side_roundtrip():
     assert views.shape == (k, m, n)
     back = sync.project_state(views[0], basis, proj.LEFT)
     assert back.shape == (r, n)
+
+
+# ------------------------------------------------------ factored fast path --
+
+def _structured_stack(key, side, k=5, m=16, n=24, r=4):
+    """Projected moments with a graded shared signal (well-separated spectrum
+    so the dense and factored joint projectors agree to fp32 precision)."""
+    scale = jnp.linspace(5.0, 2.0, r)
+    shape = (m, r) if side == proj.RIGHT else (r, n)
+    base = jax.random.normal(key, shape) * (
+        scale[None, :] if side == proj.RIGHT else scale[:, None])
+    return jnp.stack([jnp.abs(base + 0.2 * jax.random.normal(
+        jax.random.fold_in(key, i), shape)) for i in range(k)])
+
+
+@pytest.mark.parametrize("side", [proj.RIGHT, proj.LEFT])
+@pytest.mark.parametrize("protocol", ["avg", "avg_svd", "ajive"])
+def test_sync_block_factored_matches_dense(side, protocol):
+    """sync_block_factored == sync_block (lift → 𝒮 → re-project oracle) for
+    every protocol, both sides, including the old→new basis transfer."""
+    r, dim = 4, 24
+    v_stack = _structured_stack(jax.random.PRNGKey(0), side, r=r)
+    old_b = proj.random_basis(0, dim, r)
+    new_b = proj.random_basis(1, dim, r)
+    w = jnp.array([1, 2, 1, 1, 3.0])
+    dense = sync.sync_block(protocol, v_stack, old_b, new_b, side,
+                            weights=w, rank=r)
+    fact = sync.sync_block_factored(protocol, v_stack, old_b, new_b, side,
+                                    weights=w, rank=r)
+    assert fact.shape == dense.shape
+    assert jnp.allclose(fact, dense, atol=1e-5)
+    assert float(jnp.min(fact)) >= 0.0
+
+
+def test_sync_block_factored_none():
+    v_stack = _structured_stack(jax.random.PRNGKey(0), proj.RIGHT)
+    b = proj.random_basis(0, 24, 4)
+    assert sync.sync_block_factored("none", v_stack, b, b, proj.RIGHT) is None
+
+
+def test_synced_factored_projected_shape():
+    """sync_block_synced_factored returns the round-k-basis projected state
+    (the uplink shape) — no ambient dimension anywhere."""
+    v_stack = _structured_stack(jax.random.PRNGKey(2), proj.RIGHT)
+    out = sync.sync_block_synced_factored("ajive", v_stack, proj.RIGHT,
+                                          rank=4)
+    assert out.shape == v_stack.shape[1:]
