@@ -51,7 +51,7 @@ def client_models(kind: str, rounds=10, seed=0):
     stacked = jax.tree_util.tree_map(
         lambda x: jnp.broadcast_to(x, (2,) + x.shape), eng.global_trainable)
     opt = eng._init_client_opt_states(2)
-    out_tr, _, _ = eng._local_train(stacked, opt, batches)
+    out_tr, _, _ = eng._local_train(stacked, opt, batches, eng.frozen)
 
     def client_params(i):
         tr = jax.tree_util.tree_map(lambda x: x[i], out_tr)

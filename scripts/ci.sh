@@ -2,9 +2,25 @@
 # Tier-1 verify entrypoint (the exact command from ROADMAP.md).
 #
 # Usage: scripts/ci.sh [extra pytest args]
+#        scripts/ci.sh --bench-smoke   # round-fusion perf smoke: runs
+#                                      # bench_round_e2e at tiny shapes and
+#                                      # writes BENCH_round_e2e.json at the
+#                                      # repo root (perf trajectory tracking)
 # Dev-only deps (pytest, hypothesis) are listed in requirements-dev.txt;
 # tests that need hypothesis self-skip when it is absent.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m \
+        benchmarks.bench_round_e2e --smoke --out BENCH_round_e2e.json "$@"
+    python - <<'EOF'
+import json
+acc = json.load(open("BENCH_round_e2e.json"))["acceptance"]
+print("round_e2e acceptance:", json.dumps(acc, indent=1))
+EOF
+    exit 0
+fi
 
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -303,3 +303,69 @@ def ajive_sync_factored(v_stack: jnp.ndarray, rank: int,
 
     return jnp.einsum("c,c...->...", normalize_weights(weights, c_views),
                       joint)
+
+
+def ajive_sync_hetero_factored(v_stack: jnp.ndarray, b_stack: jnp.ndarray,
+                               rank: int,
+                               weights: Optional[jnp.ndarray] = None,
+                               side: str = "right") -> jnp.ndarray:
+    """Factored AJIVE 𝒮 for **heterogeneous client bases** (adaptive round 0).
+
+    Client i lifted its ṽ with its *own* orthonormal basis ``Q_i``; the dense
+    oracle builds every ``(m, n)`` view ``V^i = ṽ^i Q_iᵀ`` (right) /
+    ``Q_i ṽ^i`` (left), runs AJIVE, and re-projects the weighted joint
+    component onto the reference (client-0) basis ``Q_0``. All of that closes
+    over r×r transfer algebra:
+
+      right  Phase-1/2 are basis-free (``V^i V^iᵀ = ṽ^i ṽ^iᵀ`` since
+             ``Q_iᵀ Q_i = I``) — identical to the shared-basis path; the
+             per-client basis change enters only in Phase 3, where the r×r
+             transfer ``T_i = Q_iᵀ Q_0`` composes into the projected joint:
+             ``J^i Q_0 = (U Uᵀ ṽ^i) T_i``.
+      left   Phase-1 scores lift as ``Q_i u^i`` (skinny, O(dim·r)); the
+             basis change ``Q_iᵀ Q_j`` is thereby composed into the Phase-2
+             score Gram, and Phase 3 is ``Q_0ᵀ J^i = (Q_0ᵀ U)(Uᵀ Q_i) ṽ^i``
+             — r×k algebra throughout.
+
+    v_stack (C, m, r) right | (C, r, n) left; b_stack (C, dim, r) per-client
+    end-of-round bases. Returns the weighted joint estimate in projected
+    shape, expressed on the client-0 basis (matching the dense per-client
+    lift oracle to fp32 precision on full-rank inputs). No ``(C, m, n)``
+    view, ``(n, n)`` projector, or dense broadcast is ever formed. Stacked
+    scan blocks (C, nb, ·, r) vmap over nb.
+    """
+    if v_stack.ndim == 4:                          # stacked scan blocks
+        return jax.vmap(
+            lambda vs, bs: ajive_sync_hetero_factored(vs, bs, rank, weights,
+                                                      side),
+            in_axes=1, out_axes=0)(v_stack, b_stack)
+
+    a = v_stack.astype(jnp.float32)                # (C, m, r) | (C, r, n)
+    b = b_stack.astype(jnp.float32)                # (C, dim, r)
+    c_views = a.shape[0]
+    r = a.shape[-1] if side == "right" else a.shape[-2]
+    k = min(rank, r)
+
+    if side == "right":
+        gram = jnp.einsum("cmr,cms->crs", a, a)            # (C, r, r)
+        lam, wv = jax.vmap(lambda g: _topk_eig_desc(g, k))(gram)
+        scores = jnp.einsum("cmr,crk->cmk", a, wv)
+        scores = scores * _inv_sqrt_rank_safe(lam)[:, None, :]
+        stacked = jnp.moveaxis(scores, 0, 1).reshape(a.shape[1], c_views * k)
+        u_joint = _factored_joint_scores(stacked, k)       # (m, k)
+        joint = jnp.einsum("mj,cjr->cmr", u_joint,
+                           jnp.einsum("mj,cmr->cjr", u_joint, a))
+        transfer = jnp.einsum("cdr,ds->crs", b, b[0])      # T_i = Q_iᵀ Q_0
+        joint = jnp.einsum("cmr,crs->cms", joint, transfer)
+    else:
+        gram = jnp.einsum("crn,csn->crs", a, a)            # (C, r, r)
+        _, wv = jax.vmap(lambda g: _topk_eig_desc(g, k))(gram)
+        scores = jnp.einsum("cdr,crk->cdk", b, wv)         # Q_i u^i, skinny
+        stacked = jnp.moveaxis(scores, 0, 1).reshape(b.shape[1], c_views * k)
+        u_joint = _factored_joint_scores(stacked, k)       # (dim, k)
+        t0 = jnp.einsum("dr,dk->rk", b[0], u_joint)        # Q_0ᵀ U
+        ti = jnp.einsum("cdr,dk->crk", b, u_joint)         # Q_iᵀ U
+        joint = jnp.einsum("rk,csk,csn->crn", t0, ti, a)
+
+    return jnp.einsum("c,c...->...", normalize_weights(weights, c_views),
+                      joint)

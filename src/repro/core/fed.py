@@ -19,11 +19,25 @@ aggregation, state-sync) 4-tuple per Table 1:
   fedgalore-    dense      GaLoreAdamW  dense avg       none
   fedgalore     dense      GaLoreAdamW  dense avg       AJIVE(ṽ)
   ============  =========  ===========  ==============  =======
-"""
+
+Execution model
+---------------
+The default round is **whole-round fused**: InitState (Eq. 5 — fresh moments,
+installed synced ṽ, bucketed projector refresh), T local steps, aggregation 𝒜
+and state sync 𝒮 lower as ONE jitted program per round, with the stacked
+``(C, …)`` client trainable/opt-state buffers donated back in every call so
+XLA reuses their memory for the round's outputs (no per-round re-stack, no
+doubled peak). 𝒮 never leaves projected coordinates: shared-basis rounds run
+the factored protocols, and the adaptive round-0 diverged-basis case runs the
+heterogeneous-basis factored sync (r×r transfer Grams — no dense ``(C, m, n)``
+lift anywhere). :meth:`FedEngine.run_rounds` additionally drives K rounds as a
+single ``lax.scan`` dispatch for benchmark sweeps. ``FedConfig.fused_round=
+False`` (or ``factored_sync=False``) restores the eager stage-by-stage
+reference round — the parity oracle, and the only path that executes the
+dense per-client lift."""
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional
 
 import jax
@@ -84,12 +98,17 @@ class FedConfig:
     seed: int = 0
     reset_opt_each_round: bool = True  # 𝒮 'none' => reinit each round
     # Fast paths (see galore / state_sync module docstrings). factored_sync
-    # synchronizes in projected coordinates under the shared-basis invariant
-    # of the seeded-broadcast protocol; False restores the dense per-client
-    # lift (the oracle, and the only correct path for heterogeneous bases).
+    # synchronizes in projected coordinates — shared-basis rounds via the
+    # seeded-broadcast invariant, the adaptive round 0 via the heterogeneous-
+    # basis r×r transfer Grams; False restores the dense per-client lift
+    # (the parity oracle). fused_round compiles InitState + T local steps +
+    # 𝒜 + 𝒮 as one buffer-donated program per round; False runs the eager
+    # stage-by-stage reference round (requires factored_sync=False to also
+    # exercise the dense 𝒮 oracle).
     fused: bool = True
     use_pallas: Optional[bool] = None
     factored_sync: bool = True
+    fused_round: bool = True
 
 
 # ------------------------------------------------------------ trainables ----
@@ -156,10 +175,26 @@ class FedEngine:
             eps=cfg.eps, refresh_mode="auto", fused=cfg.fused,
             use_pallas=cfg.use_pallas)
         self.tx = self._make_tx()
-        self._local_train = jax.jit(jax.vmap(self._local_train_one,
-                                             in_axes=(0, 0, 0)))
+        # Client axes for the optimizer state: moments/bases are per-client
+        # (axis 0); the GaLore step counter and round seed stay UNBATCHED —
+        # they are identical across clients by construction, and keeping them
+        # scalar keeps the in-step `count % τ` refresh a real `lax.cond`
+        # under vmap (a batched predicate would lower to a select that
+        # computes the RSVD branch every local step).
+        self._opt_axes = self._client_opt_axes()
+        self._local_train = jax.jit(jax.vmap(
+            self._local_train_one, in_axes=(0, self._opt_axes, 0, None),
+            out_axes=(0, self._opt_axes, 0)))
         self.round_idx = 0
         self.synced_v = None   # lifted+projected ṽ init from 𝒮
+        # Whole-round fused program state: the stacked (C, …) client buffers
+        # are donated back into every round call (their memory is reused for
+        # the round's outputs), and the jitted round / scan-over-rounds
+        # drivers are built lazily on first use.
+        self._client_trainable = None
+        self._client_opt = None
+        self._round_jit = None
+        self._rounds_scan_jit = None
 
     # ----------------------------------------------------------- optimizer --
     def _make_tx(self):
@@ -180,19 +215,20 @@ class FedEngine:
         raise ValueError(o)
 
     # -------------------------------------------------------------- 𝒯 -------
-    def _trainable_loss(self, trainable, batch):
+    def _trainable_loss(self, trainable, batch, frozen):
         if self.spec.trainable in ("dense", "galore"):
-            params = merge_dense(self.frozen, trainable)
+            params = merge_dense(frozen, trainable)
         else:
-            params = merge_lora(self.frozen, trainable, self.cfg.lora_scale,
+            params = merge_lora(frozen, trainable, self.cfg.lora_scale,
                                 freeze_a=(self.spec.trainable == "lora_b"))
         return self.loss_fn(params, batch)
 
-    def _local_train_one(self, trainable, opt_state, batches):
+    def _local_train_one(self, trainable, opt_state, batches, frozen):
         """T local steps on one client (lax.scan) — Definition 3.1."""
         def step(carry, batch):
             tr, st = carry
-            loss, grads = jax.value_and_grad(self._trainable_loss)(tr, batch)
+            loss, grads = jax.value_and_grad(self._trainable_loss)(
+                tr, batch, frozen)
             updates, st = self.tx.update(grads, st, tr)
             tr = apply_updates(tr, updates)
             return (tr, st), loss
@@ -200,92 +236,303 @@ class FedEngine:
             step, (trainable, opt_state), batches)
         return trainable, opt_state, losses
 
+    def _init_state0(self, round_idx, synced_v, global_trainable):
+        """One client's round-start InitState (Eq. 5): fresh moments, install
+        the synced ṽ, refresh the projector for the new round (seeded
+        broadcast — identical for every client, so the caller broadcasts the
+        result along the client axis). jit/scan-safe in ``round_idx``."""
+        st = self.tx.init(global_trainable)
+        if self.spec.optimizer == "galore_adamw":
+            g = gal.galore_state_of(st)
+            g = gal.with_seed(g, self.cfg.seed + round_idx)       # s_k
+            g = g._replace(count=jnp.asarray(
+                round_idx * self.cfg.local_steps, jnp.int32))
+            if synced_v is not None:
+                g = gal.with_projected_v(g, synced_v)
+            g = gal.manual_refresh(self.galore_cfg, g, round_idx)
+            st = gal.replace_galore_state(st, g)
+        return st
+
+    def _client_opt_axes(self):
+        """vmap axes tree for the optimizer state: 0 everywhere except the
+        GaLore counter/seed, which stay scalar (see __init__)."""
+        st = jax.eval_shape(lambda: self.tx.init(self.global_trainable))
+
+        def per_state(s):
+            if isinstance(s, gal.GaloreState):
+                return gal.GaloreState(
+                    count=None, seed=None,
+                    blocks=jax.tree_util.tree_map(lambda _: 0, s.blocks))
+            return jax.tree_util.tree_map(lambda _: 0, s)
+
+        if isinstance(st, gal.GaloreState):
+            return per_state(st)
+        return tuple(per_state(s) for s in st)
+
+    def _stack_opt_state(self, st, n_clients: int):
+        """Broadcast one InitState along the client axis, honoring the
+        unbatched-count/seed layout of :meth:`_client_opt_axes`."""
+        bcast = lambda x: jnp.broadcast_to(x, (n_clients,) + x.shape)
+
+        def per_state(s):
+            if isinstance(s, gal.GaloreState):
+                return gal.GaloreState(
+                    count=s.count, seed=s.seed,
+                    blocks=jax.tree_util.tree_map(bcast, s.blocks))
+            return jax.tree_util.tree_map(bcast, s)
+
+        if isinstance(st, gal.GaloreState):
+            return per_state(st)
+        return tuple(per_state(s) for s in st)
+
     def _init_client_opt_states(self, n_clients: int):
-        """Round-start InitState (Eq. 5): fresh states, then install synced ṽ
-        and refresh the projector for the new round."""
-        def init_one(i):
-            st = self.tx.init(self.global_trainable)
-            if self.spec.optimizer == "galore_adamw":
-                g = gal.galore_state_of(st)
-                g = gal.with_seed(g, self.cfg.seed + self.round_idx)  # s_k
-                g = g._replace(count=jnp.asarray(
-                    self.round_idx * self.cfg.local_steps, jnp.int32))
-                if self.synced_v is not None:
-                    g = gal.with_projected_v(g, self.synced_v)
-                g = gal.manual_refresh(self.galore_cfg, g, self.round_idx)
-                st = gal.replace_galore_state(st, g)
-            return st
-        states = [init_one(i) for i in range(n_clients)]
-        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+        """Round-start InitState for all clients. States are identical by
+        construction (the round-boundary refresh is the seeded broadcast), so
+        one state is built — with the bucketed ``manual_refresh``, one vmapped
+        refresh per shape bucket — and broadcast along the client axis."""
+        st = self._init_state0(self.round_idx, self.synced_v,
+                               self.global_trainable)
+        return self._stack_opt_state(st, n_clients)
 
     # ------------------------------------------------------------ a round ---
+    def _normalize_weights(self, weights, k_clients):
+        return sync_lib.normalize_weights(weights, k_clients)
+
     def run_round(self, client_batches: PyTree, weights=None):
         """client_batches: pytree with leading axes (K clients, T steps, ...).
 
-        Returns dict of metrics. Mutates engine global state.
+        Returns dict of metrics. Mutates engine global state. Default: the
+        whole-round fused program (one dispatch, donated client buffers);
+        ``fused_round=False`` or ``factored_sync=False`` runs the eager
+        stage-by-stage reference round.
         """
         k_clients = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
-        w = (jnp.full((k_clients,), 1.0 / k_clients) if weights is None
-             else jnp.asarray(weights, jnp.float32) / jnp.sum(jnp.asarray(weights)))
+        w = self._normalize_weights(weights, k_clients)
+        if not (self.cfg.fused_round and self.cfg.factored_sync):
+            return self._run_round_eager(client_batches, w, k_clients)
 
+        self._ensure_client_buffers(k_clients)
+        out = self._round_jitted()(
+            self._client_trainable, self._client_opt, self.global_trainable,
+            self.frozen, self.synced_v,
+            jnp.asarray(self.round_idx, jnp.int32), client_batches, w)
+        if self._frozen_mutates():
+            (self._client_trainable, self._client_opt, self.global_trainable,
+             self.frozen, self.synced_v, losses) = out
+        else:
+            (self._client_trainable, self._client_opt, self.global_trainable,
+             self.synced_v, losses) = out
+        self.round_idx += 1
+        return {"local_loss": losses,                      # (K, T)
+                "mean_final_loss": float(jnp.mean(losses[:, -1]))}
+
+    def run_rounds(self, round_batches: PyTree, weights=None):
+        """K rounds as ONE dispatch: ``lax.scan`` over the fused round.
+
+        round_batches: pytree with leading (K rounds, C clients, T steps, ...)
+        axes. Returns dict with ``local_loss`` of shape (K, C, T). Mutates
+        engine global state exactly as K successive :meth:`run_round` calls
+        (modulo the eager round-0 dense-𝒮 oracle, replaced by the
+        heterogeneous-basis factored sync).
+        """
+        leading = jax.tree_util.tree_leaves(round_batches)[0].shape
+        k_rounds, k_clients = leading[0], leading[1]
+        w = self._normalize_weights(weights, k_clients)
+        if not (self.cfg.fused_round and self.cfg.factored_sync):
+            # Honor the eager/oracle configuration: K sequential reference
+            # rounds (keeps dense-𝒮 oracle comparisons driven through
+            # run_rounds honest instead of silently going factored).
+            losses = jnp.stack([
+                self._run_round_eager(
+                    jax.tree_util.tree_map(lambda x, r=r: x[r],
+                                           round_batches),
+                    w, k_clients)["local_loss"]
+                for r in range(int(k_rounds))])
+            return {"local_loss": losses,
+                    "mean_final_loss": float(jnp.mean(losses[-1, :, -1]))}
+        if self._rounds_scan_jit is None:
+            frozen_mutates = self._frozen_mutates()
+
+            def scan_rounds(global_tr, frozen, synced_v, round_idx,
+                            batches, w):
+                # frozen rides in the carry only for the lift aggregations
+                # that rewrite it; otherwise it is scan-invariant (closed
+                # over by the body — no per-iteration copy).
+                def body(carry, round_b):
+                    if frozen_mutates:
+                        g_tr, fz, sv, ridx = carry
+                    else:
+                        (g_tr, sv, ridx), fz = carry, frozen
+                    _, _, g_tr, fz, sv, losses = self._round_core(
+                        g_tr, fz, sv, ridx, round_b, w)
+                    new_carry = ((g_tr, fz, sv, ridx + 1) if frozen_mutates
+                                 else (g_tr, sv, ridx + 1))
+                    return new_carry, losses
+                carry0 = ((global_tr, frozen, synced_v, round_idx)
+                          if frozen_mutates
+                          else (global_tr, synced_v, round_idx))
+                carry, losses = jax.lax.scan(body, carry0, batches)
+                return carry, losses
+            self._rounds_scan_jit = jax.jit(scan_rounds)
+
+        synced_v = self.synced_v
+        if synced_v is None and self._method_syncs():
+            # Uniform scan carry: a zero synced ṽ is bit-identical to "no
+            # synced state" (fresh moments are zero and the install clamps
+            # at zero), so round 0 inside the scan matches run_round.
+            synced_v = self._zero_synced_template()
+        carry, losses = self._rounds_scan_jit(
+            self.global_trainable, self.frozen, synced_v,
+            jnp.asarray(self.round_idx, jnp.int32), round_batches, w)
+        if self._frozen_mutates():
+            self.global_trainable, self.frozen, new_synced, _ = carry
+        else:
+            self.global_trainable, new_synced, _ = carry
+        if self._method_syncs():
+            self.synced_v = new_synced
+        self.round_idx += int(k_rounds)
+        return {"local_loss": losses,                      # (K, C, T)
+                "mean_final_loss": float(jnp.mean(losses[-1, :, -1]))}
+
+    # ------------------------------------------------- fused round program --
+    def _method_syncs(self) -> bool:
+        return (self.spec.state_sync != "none"
+                and self.spec.optimizer == "galore_adamw")
+
+    def _zero_synced_template(self):
+        st = jax.eval_shape(lambda: self.tx.init(self.global_trainable))
+        v_tree = gal.extract_projected_v(gal.galore_state_of(st))
+        return jax.tree_util.tree_map(
+            lambda x: None if x is None else jnp.zeros(x.shape, x.dtype),
+            v_tree, is_leaf=lambda x: x is None)
+
+    def _ensure_client_buffers(self, k_clients: int):
+        """Allocate the persistent stacked (C, …) client buffers once; every
+        fused round donates them back and adopts the round's outputs."""
+        have = (self._client_trainable is not None
+                and jax.tree_util.tree_leaves(
+                    self._client_trainable)[0].shape[0] == k_clients)
+        if have:
+            return
+        # Shapes only — no device work: the buffer values are never read
+        # (InitState rebuilds them inside the round program).
+        st = jax.eval_shape(lambda: self._stack_opt_state(
+            self._init_state0(0, None, self.global_trainable), k_clients))
+        zeros = lambda s: jnp.zeros(s.shape, s.dtype)
+        self._client_trainable = jax.tree_util.tree_map(
+            lambda x: jnp.zeros((k_clients,) + x.shape, x.dtype),
+            self.global_trainable)
+        self._client_opt = jax.tree_util.tree_map(zeros, st)
+
+    def _round_core(self, global_trainable, frozen, synced_v, round_idx,
+                    client_batches, w):
+        """The whole federated round as a pure function: InitState → T local
+        steps (vmapped clients) → 𝒜 → factored 𝒮. Shared by the per-round
+        jitted program and the scan-over-rounds driver."""
+        k_clients = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (k_clients,) + x.shape),
+            global_trainable)
+        st0 = self._init_state0(round_idx, synced_v, global_trainable)
+        opt_states = self._stack_opt_state(st0, k_clients)
+        out_tr, out_opt, losses = jax.vmap(
+            self._local_train_one, in_axes=(0, self._opt_axes, 0, None),
+            out_axes=(0, self._opt_axes, 0))(
+            stacked, opt_states, client_batches, frozen)
+        new_global, new_frozen = self._aggregate_pure(out_tr, w, frozen,
+                                                      round_idx)
+        new_synced = self._sync_states_pure(out_opt, w, round_idx)
+        return out_tr, out_opt, new_global, new_frozen, new_synced, losses
+
+    def _frozen_mutates(self) -> bool:
+        """Only the lift aggregations (FLoRA / FR-LoRA) write the frozen
+        base; every other method's frozen is round-invariant, so the fused
+        programs take it as a plain input and never emit it as an output
+        (an undonated output would memcpy the whole base every round)."""
+        return self.spec.aggregation in ("lift_merge", "lift_refac")
+
+    def _round_jitted(self):
+        if self._round_jit is None:
+            frozen_mutates = self._frozen_mutates()
+
+            def round_fn(client_tr, client_opt, global_trainable, frozen,
+                         synced_v, round_idx, client_batches, w):
+                # client_tr/client_opt are donated carries: their values are
+                # never read (InitState rebuilds both), only their buffers
+                # are reused for this round's stacked outputs.
+                del client_tr, client_opt
+                out = self._round_core(global_trainable, frozen, synced_v,
+                                       round_idx, client_batches, w)
+                if frozen_mutates:
+                    return out
+                out_tr, out_opt, new_global, _, new_synced, losses = out
+                return out_tr, out_opt, new_global, new_synced, losses
+            self._round_jit = jax.jit(round_fn, donate_argnums=(0, 1))
+        return self._round_jit
+
+    def _run_round_eager(self, client_batches, w, k_clients):
+        """Stage-by-stage reference round (the parity oracle): separately
+        dispatched InitState, jitted local training, eager 𝒜 and 𝒮."""
         stacked_trainable = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x, (k_clients,) + x.shape),
             self.global_trainable)
         opt_states = self._init_client_opt_states(k_clients)
 
         out_trainable, out_opt, losses = self._local_train(
-            stacked_trainable, opt_states, client_batches)
+            stacked_trainable, opt_states, client_batches, self.frozen)
 
-        self._aggregate(out_trainable, w)
-        self._sync_states(out_opt, w)
+        self.global_trainable, self.frozen = self._aggregate_pure(
+            out_trainable, w, self.frozen, self.round_idx)
+        self.synced_v = self._sync_states_eager(out_opt, w)
         self.round_idx += 1
         return {"local_loss": losses,                      # (K, T)
                 "mean_final_loss": float(jnp.mean(losses[:, -1]))}
 
     # -------------------------------------------------------------- 𝒜 -------
-    def _aggregate(self, stacked, w):
+    def _aggregate_pure(self, stacked, w, frozen, round_idx):
+        """Aggregation 𝒜 as a pure function of the client-stacked trainables:
+        returns (new_global_trainable, new_frozen)."""
         s = self.spec.aggregation
         c = self.cfg
         if s == "dense_avg":
-            self.global_trainable = agg.dense_delta_average(stacked, w)
-        elif s == "factor_avg":
-            self.global_trainable = agg.factor_average(stacked, w)
-        elif s == "fair":
-            self.global_trainable = agg.lora_fair_refine(stacked, w, c.lora_scale)
-        elif s in ("lift_merge", "lift_refac"):
+            return agg.dense_delta_average(stacked, w), frozen
+        if s == "factor_avg":
+            return agg.factor_average(stacked, w), frozen
+        if s == "fair":
+            return agg.lora_fair_refine(stacked, w, c.lora_scale), frozen
+        if s in ("lift_merge", "lift_refac"):
             deltas = agg.lift_average(stacked, w, c.lora_scale)
             if s == "lift_merge":
                 # FLoRA: the full-rank average reaches every client via the
                 # merged base; adapters restart from zero.
-                self.frozen = jax.tree_util.tree_map(
+                frozen = jax.tree_util.tree_map(
                     lambda p, d: p if d is None else p + d.astype(p.dtype),
-                    self.frozen, deltas, is_leaf=lambda x: x is None)
-                self.global_trainable = self._fresh_adapters()
-            else:
-                # FR-LoRA: rank-r refactorization carries what fits in the
-                # adapters; the residual merges into the base (kept, not lost).
-                new_ad, resid = [], []
-                dl, treedef = jax.tree_util.tree_flatten(
-                    deltas, is_leaf=lambda x: x is None)
-                for d in dl:
-                    if d is None:
-                        new_ad.append(None)
-                        resid.append(None)
-                    else:
-                        pair = lora_lib.svd_truncate(d / max(c.lora_scale, 1e-12),
-                                                     c.rank)
-                        new_ad.append(pair)
-                        resid.append(d - c.lora_scale * (pair.b @ pair.a))
-                self.global_trainable = jax.tree_util.tree_unflatten(treedef, new_ad)
-                resid = jax.tree_util.tree_unflatten(treedef, resid)
-                self.frozen = jax.tree_util.tree_map(
-                    lambda p, r: p if r is None else p + r.astype(p.dtype),
-                    self.frozen, resid, is_leaf=lambda x: x is None)
-        else:
-            raise ValueError(s)
+                    frozen, deltas, is_leaf=lambda x: x is None)
+                return self._fresh_adapters(round_idx), frozen
+            # FR-LoRA: rank-r refactorization carries what fits in the
+            # adapters; the residual merges into the base (kept, not lost).
+            new_ad, resid = [], []
+            dl, treedef = jax.tree_util.tree_flatten(
+                deltas, is_leaf=lambda x: x is None)
+            for d in dl:
+                if d is None:
+                    new_ad.append(None)
+                    resid.append(None)
+                else:
+                    pair = lora_lib.svd_truncate(d / max(c.lora_scale, 1e-12),
+                                                 c.rank)
+                    new_ad.append(pair)
+                    resid.append(d - c.lora_scale * (pair.b @ pair.a))
+            trainable = jax.tree_util.tree_unflatten(treedef, new_ad)
+            resid = jax.tree_util.tree_unflatten(treedef, resid)
+            frozen = jax.tree_util.tree_map(
+                lambda p, r: p if r is None else p + r.astype(p.dtype),
+                frozen, resid, is_leaf=lambda x: x is None)
+            return trainable, frozen
+        raise ValueError(s)
 
-    def _fresh_adapters(self):
-        key = jax.random.PRNGKey(self.cfg.seed + 1000 + self.round_idx)
+    def _fresh_adapters(self, round_idx):
+        key = jax.random.PRNGKey(self.cfg.seed + 1000 + round_idx)
         return lora_lib.tree_lora_init(key, self.base_params, self.target_fn,
                                        self.cfg.rank)
 
@@ -296,24 +543,23 @@ class FedEngine:
         The only in-step refresh the engine permits fires at count == 0
         (round 0, refresh_every is effectively ∞); with adaptive refreshes
         enabled that refresh is data-driven from each client's *own* gradient,
-        so round-0 bases are client-specific and 𝒮 must take the dense
-        per-client lift. From round 1 on, every refresh is the seeded-random
-        broadcast (manual_refresh with grads=None) — bases are bit-identical
-        across clients and the factored path applies.
+        so round-0 bases are client-specific and 𝒮 must account for the
+        per-client basis (heterogeneous factored sync; dense per-client lift
+        in the eager oracle). From round 1 on, every refresh is the seeded-
+        random broadcast (manual_refresh with grads=None) — bases are
+        bit-identical across clients and the shared factored path applies.
         """
         round0_adaptive = (self.round_idx == 0
                            and self.galore_cfg.adaptive_steps > 0
                            and self.galore_cfg.refresh_mode != "random")
         return not round0_adaptive
 
-    def _sync_states(self, stacked_opt_states, w):
-        if self.spec.state_sync == "none" or self.spec.optimizer != "galore_adamw":
-            self.synced_v = None
-            return
+    def _sync_blocks(self, stacked_opt_states, block_fn):
+        """Map ``block_fn(v_stack, b_stack, side, rank)`` over the adapted
+        blocks of the client-stacked optimizer states."""
         g_stack = gal.galore_state_of(stacked_opt_states)
         v_stack_tree = gal.extract_projected_v(g_stack)     # leaves (K, ., r)
         basis_tree = gal.extract_bases(g_stack)             # leaves (K, dim, r)
-
         vs, treedef = jax.tree_util.tree_flatten(v_stack_tree,
                                                  is_leaf=lambda x: x is None)
         bs = jax.tree_util.tree_leaves(basis_tree, is_leaf=lambda x: x is None)
@@ -324,16 +570,56 @@ class FedEngine:
                 continue
             rank = b_stack.shape[-1]
             side = proj.RIGHT if v_stack.shape[-1] == rank else proj.LEFT
+            synced.append(block_fn(v_stack, b_stack, side, rank))
+        return jax.tree_util.tree_unflatten(treedef, synced)
 
-            if self.cfg.factored_sync and self._bases_shared():
+    def _sync_states_pure(self, stacked_opt_states, w, round_idx):
+        """Factored 𝒮 for the fused round: shared-basis rounds synchronize on
+        the projected ṽ directly (no lift); the adaptive round-0 diverged-
+        basis case runs the heterogeneous-basis factored sync (r×r transfer
+        Grams) — the dense (K, m, n) per-client lift never executes. The
+        round-0 branch is a ``lax.cond`` so one compiled program serves the
+        whole scanned sweep."""
+        if not self._method_syncs():
+            return None
+        protocol = self.spec.state_sync
+        round0_hetero_possible = (self.galore_cfg.adaptive_steps > 0
+                                  and self.galore_cfg.refresh_mode != "random")
+
+        def sync_block(v_stack, b_stack, side, rank):
+            def shared(_):
                 # Shared-basis invariant (the seeded-broadcast protocol keeps
                 # every client on the identical round-k basis): synchronize
                 # directly on the projected ṽ — no (K, m, n) lift. The result
                 # stays on the round-k basis; manual_refresh applies the
                 # next-round transfer at InitState.
-                synced.append(sync_lib.sync_block_synced_factored(
-                    self.spec.state_sync, v_stack, side, w, rank))
-                continue
+                return sync_lib.sync_block_synced_factored(
+                    protocol, v_stack, side, w, rank)
+
+            def hetero(_):
+                return sync_lib.sync_block_hetero_factored(
+                    protocol, v_stack, b_stack, side, w, rank)
+
+            if not round0_hetero_possible:
+                return shared(None)
+            return jax.lax.cond(round_idx == 0, hetero, shared, operand=None)
+
+        return self._sync_blocks(stacked_opt_states, sync_block)
+
+    def _sync_states_eager(self, stacked_opt_states, w):
+        """Reference 𝒮 for the eager round: the factored shared-basis path
+        when it applies, otherwise (adaptive round 0, or factored_sync=False)
+        the dense per-client lift — the retained parity oracle for the
+        heterogeneous factored sync."""
+        if not self._method_syncs():
+            return None
+        protocol = self.spec.state_sync
+        use_factored = self.cfg.factored_sync and self._bases_shared()
+
+        def sync_block(v_stack, b_stack, side, rank):
+            if use_factored:
+                return sync_lib.sync_block_synced_factored(
+                    protocol, v_stack, side, w, rank)
 
             def sync_one(v_cl, b_cl):
                 # v_cl (K, m, r)|(K, r, n); b_cl (K, dim, r). Lift each
@@ -348,16 +634,14 @@ class FedEngine:
                     views = jnp.einsum("kmr,krn->kmn",
                                        b_cl.astype(jnp.float32),
                                        v_cl.astype(jnp.float32))
-                lifted = sync_lib.sync_lifted_views(self.spec.state_sync,
-                                                    views, w, rank)
+                lifted = sync_lib.sync_lifted_views(protocol, views, w, rank)
                 return sync_lib.project_state(lifted, b_cl[0], side)
 
             if v_stack.ndim == 4:        # stacked scan blocks (K, nb, ., r)
-                synced.append(jax.vmap(sync_one, in_axes=(1, 1))(v_stack,
-                                                                 b_stack))
-            else:
-                synced.append(sync_one(v_stack, b_stack))
-        self.synced_v = jax.tree_util.tree_unflatten(treedef, synced)
+                return jax.vmap(sync_one, in_axes=(1, 1))(v_stack, b_stack)
+            return sync_one(v_stack, b_stack)
+
+        return self._sync_blocks(stacked_opt_states, sync_block)
 
     # ------------------------------------------------------------- helpers --
     def global_params(self) -> PyTree:

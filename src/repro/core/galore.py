@@ -381,6 +381,55 @@ def galore_adamw(cfg: GaloreConfig, learning_rate, weight_decay: float = 0.01,
     return chain(*txs)
 
 
+def _bucketed_manual_refresh(cfg: GaloreConfig, blk_leaves, grads_leaves,
+                             refresh_idx, seed):
+    """Shape-bucketed round-boundary refresh: blocks with identical
+    (basis shape, moment shape) share one stacked bucket whose key
+    derivation, basis draw (QR / RSVD / SVD), and r×r moment transfer are
+    emitted once and vmapped — O(buckets) ops instead of O(leaves). Per-block
+    keys fold the *original* leaf index so every basis is bit-identical to
+    the per-leaf reference loop (the broadcast-a-seed protocol is unaffected).
+    """
+    out = [None] * len(blk_leaves)
+    buckets: dict = {}
+    for i, st in enumerate(blk_leaves):
+        if isinstance(st, GaloreBlockState):
+            buckets.setdefault((tuple(st.basis.shape), tuple(st.m.shape)),
+                               []).append(i)
+        else:
+            out[i] = st
+
+    for (bshape, mshape), idxs in sorted(buckets.items()):
+        rank = bshape[-1]
+        dim = bshape[-2]
+        lead = bshape[:-2]
+        side = proj.RIGHT if mshape[-1] == rank else proj.LEFT
+        basis = jnp.stack([blk_leaves[i].basis for i in idxs])
+        m = jnp.stack([blk_leaves[i].m for i in idxs])
+        v = jnp.stack([blk_leaves[i].v for i in idxs])
+        block_ids = jnp.asarray(idxs, jnp.uint32)
+        keys = jax.vmap(lambda bid: proj.seeded_block_key(
+            seed, refresh_idx, bid))(block_ids)
+        if lead:
+            keys = jax.vmap(lambda kk: proj.stacked_keys(kk, lead[0]))(keys)
+        if grads_leaves is not None:
+            g32 = jnp.stack([grads_leaves[i] for i in idxs]).astype(
+                jnp.float32)
+            if cfg.use_exact_svd:
+                new_basis = proj.svd_basis_nd(g32, rank, side)
+            else:
+                new_basis = proj.rsvd_basis_nd(g32, rank, side, keys,
+                                               cfg.oversample)
+        else:
+            new_basis = proj.random_basis_nd(keys, dim, rank)
+        m_new = proj.reproject(m, basis, new_basis, side)
+        v_new = jnp.maximum(proj.reproject(v, basis, new_basis, side), 0.0)
+        for j, i in enumerate(idxs):
+            out[i] = GaloreBlockState(basis=new_basis[j], m=m_new[j],
+                                      v=v_new[j])
+    return out
+
+
 def manual_refresh(cfg: GaloreConfig, state: GaloreState, refresh_idx,
                    grads: Optional[PyTree] = None) -> GaloreState:
     """Refresh every block basis *now* (round-boundary refresh used by the
@@ -388,21 +437,34 @@ def manual_refresh(cfg: GaloreConfig, state: GaloreState, refresh_idx,
     production train step).
 
     Data-driven (RSVD/SVD of ``grads``) when ``grads`` is given and
-    ``refresh_idx < adaptive_steps``; seeded-random otherwise.
+    ``refresh_idx < adaptive_steps``; seeded-random otherwise. With
+    ``grads=None`` (the engine's seeded-broadcast round boundary) the refresh
+    index may be a traced value, so the refresh is jit/scan-safe and the
+    fused round program can run it with a scanned round counter. The default
+    ``cfg.fused`` execution is shape-bucketed (one vmapped key-derivation +
+    QR + transfer per bucket); ``fused=False`` keeps the per-leaf reference
+    loop as the parity oracle.
     """
-    # Called at round boundaries with a *concrete* refresh index (the round
-    # number) — the adaptive-vs-random decision is made at trace time.
-    refresh_idx_int = int(refresh_idx)
-    refresh_idx = jnp.asarray(refresh_idx_int, jnp.uint32)
     grads_leaves = None
     if grads is not None:
-        grads_leaves = jax.tree_util.tree_leaves(grads)
+        # Data-driven refreshes need a *concrete* refresh index (the round
+        # number) — the adaptive-vs-random decision is made at trace time.
+        refresh_idx_int = int(refresh_idx)
+        adaptive = (cfg.refresh_mode != "random"
+                    and refresh_idx_int < cfg.adaptive_steps)
+        if adaptive:
+            grads_leaves = jax.tree_util.tree_leaves(grads)
+    refresh_idx = jnp.asarray(refresh_idx, jnp.uint32)
 
     blk_leaves, treedef = jax.tree_util.tree_flatten(
         state.blocks, is_leaf=lambda x: isinstance(x, (GaloreBlockState,
                                                        DenseMoments)))
-    adaptive = (grads is not None and cfg.refresh_mode != "random"
-                and refresh_idx_int < cfg.adaptive_steps)
+    if cfg.fused:
+        out = _bucketed_manual_refresh(cfg, blk_leaves, grads_leaves,
+                                       refresh_idx, state.seed)
+        return GaloreState(count=state.count, seed=state.seed,
+                           blocks=jax.tree_util.tree_unflatten(treedef, out))
+
     out = []
     for block_id, st in enumerate(blk_leaves):
         if not isinstance(st, GaloreBlockState):
@@ -414,7 +476,7 @@ def manual_refresh(cfg: GaloreConfig, state: GaloreState, refresh_idx,
         side = proj.RIGHT if st.m.shape[-1] == rank else proj.LEFT
         keys = _block_keys(state.seed, refresh_idx, block_id,
                            st.basis.shape[:-2])
-        if adaptive:
+        if grads_leaves is not None:
             g32 = grads_leaves[block_id].astype(jnp.float32)
             if cfg.use_exact_svd:
                 new_basis = proj.svd_basis_nd(g32, rank, side)

@@ -22,8 +22,16 @@ rank-r SVD re-projection of a rank-≤r lift is the identity (making
 ``avg_svd`` ≡ ``avg`` in factored form), AJIVE runs on the (C·r) score space
 (`ajive.ajive_sync_factored`), and the old→new basis change is the r×r
 transfer ``projector.reproject``. Requires the shared-basis invariant of the
-seeded-broadcast protocol (Appendix D); the dense :func:`sync_block` is the
-oracle for heterogeneous bases and parity tests.
+seeded-broadcast protocol (Appendix D).
+
+Heterogeneous bases (the adaptive round 0, or data-driven refresh modes):
+the shared-basis cancellation fails, but :func:`sync_block_hetero_factored`
+still closes the round-trip over per-client r×r transfer Grams ``Q_iᵀ Q_0``
+— averaging picks up the transfer directly, rank-r SVD factors through the
+(C·r)×(C·r) Grams of the two skinny lift factors, and AJIVE composes the
+basis change into its score Gram (`ajive.ajive_sync_hetero_factored`). No
+default configuration executes a dense lift; :func:`sync_block` and the
+per-client dense lift remain as parity oracles.
 """
 from __future__ import annotations
 
@@ -32,7 +40,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from .ajive import ajive_sync, ajive_sync_factored, normalize_weights
+from .ajive import (_inv_sqrt_rank_safe, ajive_sync, ajive_sync_factored,
+                    ajive_sync_hetero_factored, normalize_weights)
 from . import projector as proj
 
 PyTree = Any
@@ -137,6 +146,92 @@ def sync_block_synced_factored(protocol: str, v_stack: jnp.ndarray, side: str,
         r = rank if rank is not None else (
             v_stack.shape[-1] if side == proj.RIGHT else v_stack.shape[-2])
         return ajive_sync_factored(v_stack, rank=r, weights=weights, side=side)
+    raise ValueError(protocol)
+
+
+# ------------------------------------------- heterogeneous-basis factored --
+
+def transfer_grams(b_stack: jnp.ndarray) -> jnp.ndarray:
+    """Per-client r×r basis-change transfers ``T_i = Q_iᵀ Q_0`` onto the
+    reference (client-0) basis. b_stack (C, dim, r) -> (C, r, r)."""
+    b32 = b_stack.astype(jnp.float32)
+    return jnp.einsum("cdr,ds->crs", b32, b32[0])
+
+
+def _gram_orth(gram: jnp.ndarray):
+    """Rank-safe orthonormalization of a factor ``X`` from its Gram ``XᵀX``:
+    returns (coeff, rfac) with ``Q = X @ coeff`` orthonormal (numerically-null
+    directions zeroed) and ``X = Q @ rfac``."""
+    lam, vec = jnp.linalg.eigh(gram)
+    lam = jnp.maximum(lam[::-1], 0.0)
+    vec = vec[:, ::-1]
+    coeff = vec * _inv_sqrt_rank_safe(lam)[None, :]
+    rfac = (vec * jnp.sqrt(lam)[None, :]).T
+    return coeff, rfac
+
+
+def _hetero_avg_svd(v32, b32, w, rank, side):
+    """Rank-``rank`` SVD of the weighted average of heterogeneously-lifted
+    views, projected onto the client-0 basis — via the two skinny factors of
+    ``A = Σ wᵢ lift(ṽ^i, Q_i)`` and their (C·r)×(C·r) Grams, never forming
+    the dense (m, n) average."""
+    c, r = v32.shape[0], b32.shape[-1]
+    t_stack = transfer_grams(b32).reshape(c * r, r)        # Ĉᵀ Q_0
+    if side == proj.RIGHT:
+        # A = Û Ĉᵀ, Û = [wᵢ ṽ^i] (m, C·r), Ĉ = [Q_i] (n, C·r)
+        uhat = jnp.moveaxis(w[:, None, None] * v32, 0, 1).reshape(
+            v32.shape[1], c * r)
+        chat = jnp.moveaxis(b32, 0, 1).reshape(b32.shape[1], c * r)
+        cu, ru = _gram_orth(uhat.T @ uhat)
+        cc, rc = _gram_orth(chat.T @ chat)
+        p, s, wt = jnp.linalg.svd(ru @ rc.T)               # middle (C·r)²
+        left = uhat @ (cu @ p[:, :rank])                   # Q_u P_r, (m, rank)
+        right = wt[:rank] @ (cc.T @ t_stack)               # W_rᵀ Q_cᵀ Q_0
+        return (left * s[:rank][None, :]) @ right          # (m, r)
+    # A = Ĉ V̂, Ĉ = [Q_i] (m, C·r), V̂ = [wᵢ ṽ^i] stacked rows (C·r, n)
+    chat = jnp.moveaxis(b32, 0, 1).reshape(b32.shape[1], c * r)
+    vhat = (w[:, None, None] * v32).reshape(c * r, v32.shape[-1])
+    cc, rc = _gram_orth(chat.T @ chat)
+    cv, rv = _gram_orth(vhat @ vhat.T)
+    p, s, wt = jnp.linalg.svd(rc @ rv.T)
+    left = t_stack.T @ (cc @ p[:, :rank])                  # Q_0ᵀ Q_c P_r
+    right = (wt[:rank] @ cv.T) @ vhat                      # W_rᵀ Q_vᵀ, (rank, n)
+    return (left * s[:rank][None, :]) @ right              # (r, n)
+
+
+def sync_block_hetero_factored(protocol: str, v_stack: jnp.ndarray,
+                               b_stack: jnp.ndarray, side: str, weights=None,
+                               rank: Optional[int] = None
+                               ) -> Optional[jnp.ndarray]:
+    """Factored 𝒮 for **heterogeneous client bases** (the adaptive round-0
+    case): each client lifted with its own basis, so the shared-basis
+    cancellation of :func:`sync_block_synced_factored` does not apply — but
+    the lift → 𝒮 → re-project-onto-client-0 round-trip still closes over r×r
+    transfer Grams ``Q_iᵀ Q_0`` (see :func:`ajive_sync_hetero_factored`),
+    eliminating the last dense per-client lift. Returns the synced state in
+    projected shape on the client-0 basis (the dense per-client-lift
+    :func:`sync_block`-style oracle's output), or None for 'none'."""
+    if protocol == "none":
+        return None
+    if v_stack.ndim == 4:                      # stacked scan blocks (C,nb,·,r)
+        return jax.vmap(
+            lambda vs, bs: sync_block_hetero_factored(protocol, vs, bs, side,
+                                                      weights, rank),
+            in_axes=1, out_axes=0)(v_stack, b_stack)
+    r = b_stack.shape[-1]
+    rank = rank if rank is not None else r
+    v32 = v_stack.astype(jnp.float32)
+    b32 = b_stack.astype(jnp.float32)
+    w = normalize_weights(weights, v_stack.shape[0])
+    if protocol == "ajive":
+        return ajive_sync_hetero_factored(v32, b32, rank, weights, side)
+    if protocol == "avg":
+        t = transfer_grams(b32)                            # (C, r, r)
+        if side == proj.RIGHT:
+            return jnp.einsum("c,cmr,crs->ms", w, v32, t)
+        return jnp.einsum("c,crs,crn->sn", w, t, v32)
+    if protocol == "avg_svd":
+        return _hetero_avg_svd(v32, b32, w, rank, side)
     raise ValueError(protocol)
 
 

@@ -2,34 +2,39 @@
 
 Clients live on the (pod, data) mesh axes; each client's trainable copy is
 tensor-parallel over the model axis; the frozen base is FSDP-sharded
-(identical across clients). One `round_step` call runs T local GaLoreAdamW
-steps per client (lax.scan), FedAvg-aggregates via an all-reduce over the
-client axes, and returns the uploaded projected second moments ṽ. The
-server-side state filter (Algorithm 1, line 12) then runs per adapted block
-and the synchronized state is installed for the next round.
+(identical across clients). One `round_step` call runs the **whole round**
+inside the mesh: T local GaLoreAdamW steps per client (lax.scan), FedAvg
+aggregation via an all-reduce over the client axes, and the server-side state
+filter 𝒮 (Algorithm 1, line 12) — factored sync of the projected second
+moments, broadcast-free O(dim·r) install, seed bump. The round program never
+drops out of the mesh onto the host, and the jitted call donates the stacked
+client buffers (global trainable + per-client optimizer states), so each
+round's outputs reuse the previous round's memory.
 
-The server sync runs **factored** by default: the uplinked ṽ are synchronized
-directly in projected coordinates (`state_sync.sync_block_synced_factored`),
-so the round loop never materializes a dense ``(C, m, n)`` lifted view, an
-``(n, n)`` joint projector, or a dense per-client broadcast — the installed
-state is the O(dim·r) projected buffer. ``factored_sync=False`` restores the
-dense lift (the parity oracle).
+The server sync runs **factored** in every default configuration: the
+uplinked ṽ are synchronized directly in projected coordinates
+(`state_sync.sync_block_synced_factored` on the shared seeded basis;
+`state_sync.sync_block_hetero_factored` via r×r transfer Grams when
+data-driven refreshes diverge the bases, e.g. ``refresh_mode='svd'``) — no
+``(C, m, n)`` lifted view, ``(n, n)`` joint projector, or dense per-client
+broadcast is ever materialized. ``factored_sync=False`` restores the dense
+lift (the parity oracle), and ``fused_round=False`` restores the legacy
+jit-𝒯𝒜 + host-𝒮 round (the eager reference for benchmarks).
+
+:meth:`ShardedFederation.run_rounds` drives K rounds as a single
+``lax.scan`` dispatch for benchmark sweeps.
 
 This is the production counterpart of core.fed.FedEngine (which vmaps
 clients on a single host).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from ..core import galore as gal
-from ..core import projector as proj
-from ..core import state_sync as sync_lib
 from ..launch import steps as steps_lib
 
 PyTree = Any
@@ -38,13 +43,14 @@ PyTree = Any
 class ShardedFederation:
     def __init__(self, cfg: ArchConfig, spec: steps_lib.TrainSpec, mesh,
                  n_clients: int, state_sync: str = "ajive", seed: int = 0,
-                 factored_sync: bool = True):
+                 factored_sync: bool = True, fused_round: bool = True):
         self.cfg = cfg
         self.spec = spec
         self.mesh = mesh
         self.n_clients = n_clients
         self.state_sync = state_sync
         self.factored_sync = factored_sync
+        self.fused_round = fused_round
         self.round_idx = 0
 
         key = jax.random.PRNGKey(seed)
@@ -53,8 +59,17 @@ class ShardedFederation:
         self.opt_states = jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape).copy(),
             opt_state)
-        self._round = jax.jit(
-            steps_lib.make_fed_round_step(cfg, spec, n_clients))
+        # Fused default: 𝒮 + install + seed bump lower inside the round
+        # program; the stacked buffers are donated so round k+1's outputs
+        # reuse round k's memory. state_sync=None lowers the legacy 𝒯𝒜-only
+        # program used by the eager reference path.
+        self._round_core = steps_lib.make_fed_round_step(
+            cfg, spec, n_clients,
+            state_sync=(state_sync if fused_round else None),
+            factored_sync=factored_sync)
+        self._round = jax.jit(self._round_core,
+                              donate_argnums=(0, 2) if fused_round else ())
+        self._rounds_scan = None
 
     def run_round(self, batches: PyTree, weights: Optional[jnp.ndarray] = None):
         """batches: pytree with leading (C, T, b, ...) axes."""
@@ -65,79 +80,66 @@ class ShardedFederation:
                 self.global_trainable, self.frozen, self.opt_states,
                 batches, w)
         self.global_trainable = new_global
-        self.opt_states = self._sync_and_reinit(out_states, v_upload, w)
+        if self.fused_round:
+            # 𝒮 already ran in-mesh; the returned states are next-round-ready.
+            self.opt_states = out_states
+        else:
+            self.opt_states = self._sync_and_reinit(out_states, v_upload, w)
         self.round_idx += 1
         return {"losses": losses,
                 "mean_final_loss": float(jnp.mean(losses[:, -1]))}
 
-    # ------------------------------------------------------------- 𝒮 --------
+    def run_rounds(self, batches: PyTree,
+                   weights: Optional[jnp.ndarray] = None):
+        """K rounds as ONE dispatch: ``lax.scan`` over the in-mesh round.
+
+        batches: pytree with leading (K rounds, C, T, b, ...) axes. Requires
+        the fused round (𝒮 must lower inside the scanned program).
+        """
+        if not self.fused_round:
+            raise ValueError("run_rounds requires fused_round=True: the "
+                             "legacy round program returns unsynced states "
+                             "and would silently skip 𝒮 inside the scan")
+        leading = jax.tree_util.tree_leaves(batches)[0].shape
+        k_rounds = leading[0]
+        w = (jnp.full((self.n_clients,), 1.0 / self.n_clients)
+             if weights is None else weights)
+        if self._rounds_scan is None:
+            def scan_rounds(global_trainable, frozen, opt_states, bat, w):
+                def body(carry, round_b):
+                    g_tr, states = carry
+                    g_tr, states, losses, _ = self._round_core(
+                        g_tr, frozen, states, round_b, w)
+                    return (g_tr, states), losses
+                return jax.lax.scan(body, (global_trainable, opt_states),
+                                    bat)
+            self._rounds_scan = jax.jit(scan_rounds, donate_argnums=(0, 2))
+        with self.mesh:
+            (self.global_trainable, self.opt_states), losses = \
+                self._rounds_scan(self.global_trainable, self.frozen,
+                                  self.opt_states, batches, w)
+        self.round_idx += int(k_rounds)
+        return {"losses": losses,                          # (K, C, T)
+                "mean_final_loss": float(jnp.mean(losses[-1, :, -1]))}
+
+    # ---------------------------------------------- 𝒮 (eager reference) -----
     def _sync_and_reinit(self, out_states, v_upload, w):
-        g_stack = gal.galore_state_of(out_states)
-        if self.state_sync != "none":
-            synced = self._ajive_blocks(g_stack, v_upload, w)
-            g_new = gal.with_projected_v(
-                jax.tree_util.tree_map(lambda x: x, g_stack), synced)
-        else:
-            g_new = g_stack
-        g_new = gal.GaloreState(
-            count=g_new.count, seed=g_new.seed + 1, blocks=g_new.blocks)
-        return gal.replace_galore_state(out_states, g_new)
-
-    def _ajive_blocks(self, g_stack, v_upload, w):
-        bases = gal.extract_bases(g_stack)
-        vs, treedef = jax.tree_util.tree_flatten(v_upload,
-                                                 is_leaf=lambda x: x is None)
-        bs = jax.tree_util.tree_leaves(bases, is_leaf=lambda x: x is None)
-        out = []
-        for v_stack, b_stack in zip(vs, bs):
-            if v_stack is None:
-                out.append(None)
-                continue
-            rank = b_stack.shape[-1]
-            side = proj.RIGHT if v_stack.shape[-1] == rank else proj.LEFT
-
-            if self.factored_sync and self._bases_shared():
-                # Factored 𝒮: sync the (C, ., r) uplink directly; the shared
-                # seeded basis cancels, so no (C, m, n) lift and no (n, n)
-                # projector. Result is the O(dim·r) projected state.
-                synced = jnp.maximum(sync_lib.sync_block_synced_factored(
-                    self.state_sync, v_stack, side, w, rank), 0.0)
-            else:
-                synced = self._dense_sync_block(v_stack, b_stack, w, rank,
-                                                side)
-            # every client slot shares the synced projected state (a
-            # broadcast view of the O(dim·r) buffer, not a dense tensor)
-            out.append(jnp.broadcast_to(
-                synced[None], (self.n_clients,) + synced.shape))
-        return jax.tree_util.tree_unflatten(treedef, out)
+        """Host-side 𝒮 of the legacy round: the same server filter as the
+        in-mesh tail of the fused round (`steps.sync_client_states`), run
+        eagerly between jit boundaries — the reference the fused round is
+        benchmarked against."""
+        del v_upload    # sync_client_states re-extracts from the states
+        return steps_lib.sync_client_states(
+            out_states, w, self.n_clients, self.state_sync,
+            factored=self.factored_sync, bases_shared=self._bases_shared())
 
     def _bases_shared(self) -> bool:
-        """The factored sync requires every client on the identical basis.
-        With the production ``refresh_mode='random'`` (or 'auto' with zero
-        adaptive steps, which never takes the data branch) every in-step
-        refresh is seeded-random from the broadcast seed — shared by
-        construction. 'svd' refreshes from each client's own gradient, so
-        bases diverge and the sync must take the per-client dense lift."""
+        """The shared-basis factored sync requires every client on the
+        identical basis. With the production ``refresh_mode='random'`` (or
+        'auto' with zero adaptive steps, which never takes the data branch)
+        every in-step refresh is seeded-random from the broadcast seed —
+        shared by construction. 'svd' refreshes from each client's own
+        gradient, so bases diverge and the sync takes the heterogeneous
+        factored path (dense per-client lift only with
+        ``factored_sync=False``)."""
         return self.spec.refresh_mode != "svd"
-
-    def _dense_sync_block(self, v_stack, b_stack, w, rank, side):
-        """Dense reference 𝒮 (parity oracle): lift each client's ṽ with its
-        *own* end-of-round basis (correct under diverged bases), run the
-        configured protocol on the lifted views, re-project onto the
-        client-0 basis."""
-        def sync_one(v_cl, b_cl):
-            # v_cl (C, m, r) | (C, r, n); b_cl (C, dim, r)
-            v32 = v_cl.astype(jnp.float32)
-            b32 = b_cl.astype(jnp.float32)
-            if side == proj.RIGHT:
-                views = jnp.einsum("kmr,knr->kmn", v32, b32)
-            else:
-                views = jnp.einsum("kmr,krn->kmn", b32, v32)
-            lifted = sync_lib.sync_lifted_views(self.state_sync, views, w,
-                                                rank)
-            return jnp.maximum(
-                sync_lib.project_state(lifted, b_cl[0], side), 0.0)
-
-        if v_stack.ndim == 4:         # stacked scan blocks: (C, nb, ., r)
-            return jax.vmap(sync_one, in_axes=(1, 1))(v_stack, b_stack)
-        return sync_one(v_stack, b_stack)

@@ -8,9 +8,15 @@ sharding is sound), while each client's trainable copy shards over the model
 axis only.
 
 ``make_fed_round_step`` additionally lowers a *whole round*: T local steps
-(scan) + FedAvg aggregation (weighted mean over the client axis) + projected
-second-moment extraction for server-side AJIVE sync — the paper's full
-𝒯→𝒜→𝒮 pipeline as one SPMD program.
+(scan) + FedAvg aggregation (weighted mean over the client axis) + the
+server-side state filter 𝒮 (Algorithm 1, line 12) run **inside the mesh** —
+factored on the projected ṽ (shared-basis rounds) or via heterogeneous-basis
+r×r transfer Grams (``refresh_mode='svd'``, diverged bases), followed by the
+synced-state install and seed bump for the next round. The paper's full
+𝒯→𝒜→𝒮 pipeline is one SPMD program: the round never drops out of the mesh
+onto the host. Passing ``state_sync=None`` lowers the legacy 𝒯→𝒜 program
+(raw end-of-round states returned; the caller syncs on the host — the eager
+reference path).
 """
 from __future__ import annotations
 
@@ -23,6 +29,8 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..core import galore as gal
+from ..core import projector as proj
+from ..core import state_sync as sync_lib
 from ..core.fed import merge_dense, split_trainable
 from ..models import model as model_lib
 from ..optim.base import apply_updates
@@ -131,16 +139,97 @@ def make_fed_local_step(cfg: ArchConfig, spec: TrainSpec,
     return step
 
 
-def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec,
-                        n_clients: int) -> Callable:
+def sync_client_states(out_st, w, n_clients: int, state_sync: str,
+                       factored: bool, bases_shared: bool):
+    """Server-side 𝒮 + next-round install on client-stacked optimizer states
+    (the in-mesh tail of the round program; also usable eagerly).
+
+    Synchronizes each adapted block's projected ṽ — factored on the shared
+    seeded basis, or via heterogeneous r×r transfer Grams when client bases
+    diverged (``bases_shared=False``), or through the dense per-client lift
+    oracle (``factored=False``) — installs the broadcast result in every
+    client slot, and bumps the round seed. No dense ``(C, m, n)`` view is
+    built on any factored path.
+    """
+    g_stack = gal.galore_state_of(out_st)
+    if state_sync != "none":
+        bases = gal.extract_bases(g_stack)
+        v_upload = gal.extract_projected_v(g_stack)
+        vs, treedef = jax.tree_util.tree_flatten(v_upload,
+                                                 is_leaf=lambda x: x is None)
+        bs = jax.tree_util.tree_leaves(bases, is_leaf=lambda x: x is None)
+        out = []
+        for v_stack, b_stack in zip(vs, bs):
+            if v_stack is None:
+                out.append(None)
+                continue
+            rank = b_stack.shape[-1]
+            side = proj.RIGHT if v_stack.shape[-1] == rank else proj.LEFT
+            if not factored:
+                synced = _dense_sync_block(state_sync, v_stack, b_stack, w,
+                                           rank, side)
+            elif bases_shared:
+                # Factored 𝒮: sync the (C, ., r) uplink directly; the shared
+                # seeded basis cancels, so no (C, m, n) lift and no (n, n)
+                # projector. Result is the O(dim·r) projected state.
+                synced = jnp.maximum(sync_lib.sync_block_synced_factored(
+                    state_sync, v_stack, side, w, rank), 0.0)
+            else:
+                # Diverged bases (data-driven refreshes): the lift → 𝒮 →
+                # re-project round-trip closes over r×r transfer Grams —
+                # the dense per-client lift stays a parity oracle.
+                synced = jnp.maximum(sync_lib.sync_block_hetero_factored(
+                    state_sync, v_stack, b_stack, side, w, rank), 0.0)
+            # every client slot shares the synced projected state (a
+            # broadcast view of the O(dim·r) buffer, not a dense tensor)
+            out.append(jnp.broadcast_to(synced[None],
+                                        (n_clients,) + synced.shape))
+        synced_tree = jax.tree_util.tree_unflatten(treedef, out)
+        g_new = gal.with_projected_v(g_stack, synced_tree)
+    else:
+        g_new = g_stack
+    g_new = gal.GaloreState(
+        count=g_new.count, seed=g_new.seed + 1, blocks=g_new.blocks)
+    return gal.replace_galore_state(out_st, g_new)
+
+
+def _dense_sync_block(state_sync, v_stack, b_stack, w, rank, side):
+    """Dense reference 𝒮 (parity oracle): lift each client's ṽ with its
+    *own* end-of-round basis (correct under diverged bases), run the
+    configured protocol on the lifted views, re-project onto the
+    client-0 basis."""
+    def sync_one(v_cl, b_cl):
+        # v_cl (C, m, r) | (C, r, n); b_cl (C, dim, r)
+        v32 = v_cl.astype(jnp.float32)
+        b32 = b_cl.astype(jnp.float32)
+        if side == proj.RIGHT:
+            views = jnp.einsum("kmr,knr->kmn", v32, b32)
+        else:
+            views = jnp.einsum("kmr,krn->kmn", b32, v32)
+        lifted = sync_lib.sync_lifted_views(state_sync, views, w, rank)
+        return jnp.maximum(sync_lib.project_state(lifted, b_cl[0], side), 0.0)
+
+    if v_stack.ndim == 4:         # stacked scan blocks: (C, nb, ., r)
+        return jax.vmap(sync_one, in_axes=(1, 1))(v_stack, b_stack)
+    return sync_one(v_stack, b_stack)
+
+
+def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
+                        state_sync: Optional[str] = None,
+                        factored_sync: bool = True) -> Callable:
     """A full federated round (Algorithm 1) as one SPMD program:
 
       broadcast (implicit: clients start from identical trainables) →
       T local GaLoreAdamW steps (lax.scan) →
       FedAvg aggregation = mean over the client axis (XLA: all-reduce over
       the (pod, data) mesh axes) →
-      upload ṽ: client-stacked projected second moments returned for the
-      host-side AJIVE filter.
+      𝒮 (when ``state_sync`` is a protocol name): factored sync of the
+      projected second moments, install + seed bump — all inside the mesh;
+      the returned states are ready for the next round.
+
+    ``state_sync=None`` preserves the legacy 𝒯→𝒜 program: raw end-of-round
+    states are returned and the caller runs 𝒮 on the host (the eager
+    reference path, and the dry-run default).
     """
     tx = make_galore_tx(cfg, spec)
 
@@ -172,9 +261,17 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec,
         new_global = jax.tree_util.tree_map(
             lambda x: jnp.tensordot(w, x.astype(jnp.float32), axes=(0, 0)
                                     ).astype(x.dtype), out_tr)
-        # 𝒮 payload: projected second moments ṽ (client-stacked, O(n·r))
-        g_state = gal.galore_state_of(out_st)
-        v_upload = gal.extract_projected_v(g_state)
+        if state_sync is not None:
+            # 𝒮 in-mesh: the round program returns next-round-ready states;
+            # the pre-sync ṽ is consumed internally, never materialized as
+            # an output.
+            out_st = sync_client_states(
+                out_st, w, n_clients, state_sync, factored=factored_sync,
+                bases_shared=(spec.refresh_mode != "svd"))
+            return new_global, out_st, losses, None
+        # 𝒮 payload for the host-side filter: projected second moments ṽ
+        # (client-stacked, O(n·r))
+        v_upload = gal.extract_projected_v(gal.galore_state_of(out_st))
         return new_global, out_st, losses, v_upload
 
     return round_step

@@ -3,7 +3,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import projector as proj
-from repro.core.ajive import ajive, ajive_sync, ajive_sync_factored
+from repro.core.ajive import (ajive, ajive_sync, ajive_sync_factored,
+                              ajive_sync_hetero_factored)
 
 
 def _make_views(key, k_views=6, n=48, m=48, r=5, drift_rank=2, noise=0.05,
@@ -150,4 +151,51 @@ def test_factored_never_materializes_dense(monkeypatch):
     monkeypatch.setattr(aj, "ajive", boom)
     v_stack, _ = _make_projected_views(jax.random.PRNGKey(2), "right")
     out = aj.ajive_sync_factored(v_stack, rank=8)
+    assert out.shape == (48, 8)
+
+
+# ---------------------------------------- heterogeneous-basis factored -----
+
+def _hetero_bases(key, c_views, dim, r):
+    return jnp.stack([
+        jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, i),
+                                        (dim, r)))[0]
+        for i in range(c_views)])
+
+
+def _lift_hetero(v_stack, b_stack, side):
+    if side == "right":
+        return jnp.einsum("cmr,cnr->cmn", v_stack, b_stack)
+    return jnp.einsum("cmr,crn->cmn", b_stack, v_stack)
+
+
+@pytest.mark.parametrize("side", ["right", "left"])
+def test_hetero_factored_matches_dense_per_client_lift(side):
+    """ajive_sync_hetero_factored ≡ dense AJIVE on per-client-lifted views,
+    re-projected onto the client-0 basis (the adaptive round-0 oracle)."""
+    v_stack, _ = _make_projected_views(jax.random.PRNGKey(3), side)
+    dim = 32 if side == "right" else 48
+    b_stack = _hetero_bases(jax.random.PRNGKey(11), v_stack.shape[0], dim, 8)
+    w = jnp.array([1, 1, 2, 1, 1, 3.0])
+    views = _lift_hetero(v_stack, b_stack, side)
+    dense = ajive_sync(views, rank=8, weights=w)
+    dense_proj = (dense @ b_stack[0] if side == "right"
+                  else b_stack[0].T @ dense)
+    fact = ajive_sync_hetero_factored(v_stack, b_stack, rank=8, weights=w,
+                                      side=side)
+    assert fact.shape == v_stack.shape[1:]
+    assert jnp.allclose(fact, dense_proj, atol=1e-5), float(
+        jnp.max(jnp.abs(fact - dense_proj)))
+
+
+def test_hetero_factored_never_materializes_dense(monkeypatch):
+    import repro.core.ajive as aj
+
+    def boom(*a, **k):
+        raise AssertionError("dense ajive called from hetero factored path")
+
+    monkeypatch.setattr(aj, "ajive", boom)
+    v_stack, _ = _make_projected_views(jax.random.PRNGKey(4), "right")
+    b_stack = _hetero_bases(jax.random.PRNGKey(12), v_stack.shape[0], 32, 8)
+    out = aj.ajive_sync_hetero_factored(v_stack, b_stack, rank=8)
     assert out.shape == (48, 8)

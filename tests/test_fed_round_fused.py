@@ -1,0 +1,193 @@
+"""Parity: the whole-round fused (one-dispatch, donated-buffer) federated
+round and the scan-over-rounds driver vs the eager stage-by-stage reference
+round, plus the donation contract."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.fed import FedConfig, FedEngine
+
+KEY = jax.random.PRNGKey(5)
+
+
+def _problem():
+    params = {"l1": {"w": 0.3 * jax.random.normal(KEY, (8, 16)),
+                     "b": jnp.zeros(16)},
+              "l2": {"w": 0.3 * jax.random.normal(jax.random.fold_in(KEY, 1),
+                                                  (16, 4)),
+                     "b": jnp.zeros(4)}}
+
+    def loss(p, batch):
+        x, y = batch
+        h = jnp.tanh(x @ p["l1"]["w"] + p["l1"]["b"])
+        out = h @ p["l2"]["w"] + p["l2"]["b"]
+        return jnp.mean((out - y) ** 2)
+
+    return params, loss
+
+
+def _round_batches(seed, k_rounds=None, k=4, t=5, b=16):
+    kb = jax.random.PRNGKey(seed)
+    lead = (k, t) if k_rounds is None else (k_rounds, k, t)
+    x = jax.random.normal(kb, lead + (b, 8))
+    w_true = 0.5 * jax.random.normal(jax.random.fold_in(kb, 1), (8, 4))
+    y = jnp.einsum("...bi,io->...bo", x, w_true)
+    return (x, y)
+
+
+def _trees_close(a, b, atol):
+    for la, lb in zip(jax.tree_util.tree_leaves(a),
+                      jax.tree_util.tree_leaves(b)):
+        assert jnp.allclose(la, lb, atol=atol), float(
+            jnp.max(jnp.abs(la - lb)))
+
+
+@pytest.mark.parametrize("method", ["fedgalore", "fedgalore_minus", "fedit",
+                                    "flora", "fr_lora"])
+def test_fused_round_matches_eager_reference(method):
+    """3 rounds of the fused one-dispatch round vs the eager reference
+    (separately dispatched InitState / 𝒯 / 𝒜 / 𝒮, dense round-0 𝒮 oracle).
+    flora / fr_lora additionally exercise the frozen-mutating (lift) round
+    variant, whose fused program threads the frozen base through its
+    outputs."""
+    params, loss = _problem()
+    engines = {}
+    for fused in (True, False):
+        eng = FedEngine(FedConfig(method=method, rank=4, lr=3e-2,
+                                  local_steps=5, clip_norm=10.0,
+                                  fused_round=fused, factored_sync=fused),
+                        loss, params)
+        for r in range(3):
+            m = eng.run_round(_round_batches(r))
+            assert jnp.all(jnp.isfinite(m["local_loss"]))
+        engines[fused] = eng
+    _trees_close(engines[True].global_trainable,
+                 engines[False].global_trainable, atol=1e-5)
+    _trees_close(engines[True].frozen, engines[False].frozen, atol=1e-5)
+    if engines[False].synced_v is not None:
+        _trees_close(engines[True].synced_v, engines[False].synced_v,
+                     atol=1e-5)
+    else:
+        assert engines[True].synced_v is None
+
+
+@pytest.mark.parametrize("method", ["fedgalore", "fr_lora"])
+def test_scan_over_rounds_matches_per_round(method):
+    """run_rounds (K rounds, ONE dispatch) ≡ K fused run_round calls —
+    fr_lora covers the frozen-in-carry scan variant."""
+    params, loss = _problem()
+    eng_a = FedEngine(FedConfig(method=method, rank=4, lr=3e-2,
+                                local_steps=5), loss, params)
+    eng_b = FedEngine(FedConfig(method=method, rank=4, lr=3e-2,
+                                local_steps=5), loss, params)
+    rb = _round_batches(0, k_rounds=4)
+    m = eng_a.run_rounds(rb)
+    assert m["local_loss"].shape == (4, 4, 5)
+    for r in range(4):
+        mb = eng_b.run_round(jax.tree_util.tree_map(lambda x: x[r], rb))
+        assert jnp.allclose(m["local_loss"][r], mb["local_loss"], atol=1e-6)
+    _trees_close(eng_a.global_trainable, eng_b.global_trainable, atol=1e-6)
+    _trees_close(eng_a.frozen, eng_b.frozen, atol=1e-6)
+    _trees_close(eng_a.synced_v, eng_b.synced_v, atol=1e-6)
+    assert eng_a.round_idx == eng_b.round_idx == 4
+
+
+def test_donated_buffers_second_round_ok():
+    """The fused round donates the stacked (C, …) client buffers; the engine
+    must adopt each round's outputs so the next call never touches a donated
+    (deleted) array. Also: run_round after run_rounds stays consistent."""
+    params, loss = _problem()
+    eng = FedEngine(FedConfig(method="fedgalore", rank=4, lr=3e-2,
+                              local_steps=5), loss, params)
+    m0 = eng.run_round(_round_batches(0))
+    m1 = eng.run_round(_round_batches(1))       # reuses donated buffers
+    assert jnp.isfinite(m1["mean_final_loss"])
+    eng.run_rounds(_round_batches(2, k_rounds=2))
+    m3 = eng.run_round(_round_batches(3))       # back to the donated path
+    assert jnp.isfinite(m3["mean_final_loss"])
+    assert eng.round_idx == 5
+    assert m0["mean_final_loss"] != m1["mean_final_loss"]
+
+
+def test_fused_round_single_dispatch_program():
+    """The whole round — InitState, T local steps, 𝒜, 𝒮 — must lower as one
+    jitted call: after warmup, a round triggers no new trace."""
+    params, loss = _problem()
+    eng = FedEngine(FedConfig(method="fedgalore", rank=4, lr=3e-2,
+                              local_steps=5), loss, params)
+    eng.run_round(_round_batches(0))    # round-0 trace (no synced_v)
+    eng.run_round(_round_batches(1))    # steady-state trace (with synced_v)
+    traced = eng._round_jitted()._cache_size()
+    eng.run_round(_round_batches(2))
+    assert eng._round_jitted()._cache_size() == traced
+
+
+def test_sharded_runtime_fused_matches_eager():
+    """ShardedFederation: the in-mesh 𝒮 (fused round) must reproduce the
+    legacy jit-𝒯𝒜 + host-𝒮 round, and the scan driver must match per-round
+    dispatch."""
+    from repro.configs import get_config, smoke_variant
+    from repro.fedsim import ShardedFederation
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import TrainSpec
+
+    cfg = smoke_variant(get_config("qwen1.5-0.5b"))
+    mesh = make_host_mesh(1)
+    spec = TrainSpec(rank=4, lr=1e-3, local_steps=2, refresh_mode="random")
+    c_clients = 3
+
+    def batches(seed, k_rounds=None):
+        kk = jax.random.PRNGKey(seed)
+        lead = ((c_clients, 2, 2, 8) if k_rounds is None
+                else (k_rounds, c_clients, 2, 2, 8))
+        toks = jax.random.randint(kk, lead, 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+
+    feds = {f: ShardedFederation(cfg, spec, mesh, c_clients,
+                                 state_sync="ajive", fused_round=f)
+            for f in (True, False)}
+    for r in range(2):
+        b = batches(r)
+        mf = feds[True].run_round(b)
+        me = feds[False].run_round(b)
+        assert jnp.allclose(mf["losses"], me["losses"], atol=1e-6)
+    _trees_close(feds[True].global_trainable, feds[False].global_trainable,
+                 atol=1e-6)
+    _trees_close(feds[True].opt_states, feds[False].opt_states, atol=1e-6)
+
+    fed_s = ShardedFederation(cfg, spec, mesh, c_clients, state_sync="ajive")
+    ms = fed_s.run_rounds(batches(7, k_rounds=2))
+    assert ms["losses"].shape == (2, c_clients, 2)
+    fed_p = ShardedFederation(cfg, spec, mesh, c_clients, state_sync="ajive")
+    for r in range(2):
+        fed_p.run_round(jax.tree_util.tree_map(
+            lambda x: x[r], batches(7, k_rounds=2)))
+    _trees_close(fed_s.global_trainable, fed_p.global_trainable, atol=1e-6)
+
+
+def test_sharded_runtime_svd_mode_hetero_sync_matches_dense_oracle():
+    """refresh_mode='svd' diverges the client bases, so the in-mesh 𝒮 takes
+    the heterogeneous-basis factored path; it must agree with the dense
+    per-client-lift oracle (factored_sync=False) to fp32 precision."""
+    from repro.configs import get_config, smoke_variant
+    from repro.fedsim import ShardedFederation
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import TrainSpec
+
+    cfg = smoke_variant(get_config("qwen1.5-0.5b"))
+    mesh = make_host_mesh(1)
+    spec = TrainSpec(rank=4, lr=1e-3, local_steps=2, refresh_mode="svd",
+                     refresh_every=2)
+    kk = jax.random.PRNGKey(3)
+    toks = jax.random.randint(kk, (3, 2, 2, 8), 0, cfg.vocab_size)
+    b = {"tokens": toks, "labels": toks}
+
+    fed_h = ShardedFederation(cfg, spec, mesh, 3, state_sync="ajive")
+    fed_h.run_round(b)
+    fed_d = ShardedFederation(cfg, spec, mesh, 3, state_sync="ajive",
+                              fused_round=False, factored_sync=False)
+    fed_d.run_round(b)
+    for a, d in zip(jax.tree_util.tree_leaves(fed_h.opt_states),
+                    jax.tree_util.tree_leaves(fed_d.opt_states)):
+        assert jnp.allclose(a.astype(jnp.float32), d.astype(jnp.float32),
+                            atol=1e-5)

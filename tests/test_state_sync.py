@@ -106,3 +106,81 @@ def test_synced_factored_projected_shape():
     out = sync.sync_block_synced_factored("ajive", v_stack, proj.RIGHT,
                                           rank=4)
     assert out.shape == v_stack.shape[1:]
+
+
+# ------------------------------------------ heterogeneous-basis factored ----
+
+def _hetero_bases(key, k, dim, r):
+    """Per-client orthonormal bases that genuinely diverge (the adaptive
+    round-0 / svd-refresh case)."""
+    return jnp.stack([proj.random_basis(jax.random.fold_in(key, i), dim, r)
+                      for i in range(k)])
+
+
+def _dense_hetero_oracle(protocol, v_stack, b_stack, side, w, rank):
+    """The dense per-client lift 𝒮 (what the engine's eager round-0 and the
+    runtime's factored_sync=False path execute): lift each client with its
+    own basis, sync, re-project onto the client-0 basis."""
+    v32 = v_stack.astype(jnp.float32)
+    b32 = b_stack.astype(jnp.float32)
+    if side == proj.RIGHT:
+        views = jnp.einsum("kmr,knr->kmn", v32, b32)
+    else:
+        views = jnp.einsum("kmr,krn->kmn", b32, v32)
+    lifted = sync.sync_lifted_views(protocol, views, w, rank)
+    return sync.project_state(lifted, b_stack[0], side)
+
+
+@pytest.mark.parametrize("side", [proj.RIGHT, proj.LEFT])
+@pytest.mark.parametrize("protocol", ["avg", "avg_svd", "ajive"])
+def test_hetero_factored_matches_dense_lift(side, protocol):
+    """sync_block_hetero_factored ≡ the dense per-client lift oracle to ≤1e-5
+    for every protocol and both sides — the r×r transfer-Gram path replaces
+    the last dense (C, m, n) 𝒮."""
+    r, dim, k = 4, 24, 5
+    v_stack = _structured_stack(jax.random.PRNGKey(3), side, k=k, r=r)
+    b_stack = _hetero_bases(jax.random.PRNGKey(7), k, dim, r)
+    w = jnp.array([1, 2, 1, 1, 3.0])
+    dense = _dense_hetero_oracle(protocol, v_stack, b_stack, side, w, r)
+    fact = sync.sync_block_hetero_factored(protocol, v_stack, b_stack, side,
+                                           weights=w, rank=r)
+    assert fact.shape == dense.shape == v_stack.shape[1:]
+    assert jnp.allclose(fact, dense, atol=1e-5), float(
+        jnp.max(jnp.abs(fact - dense)))
+
+
+@pytest.mark.parametrize("protocol", ["avg", "avg_svd", "ajive"])
+def test_hetero_factored_shared_bases_degenerates(protocol):
+    """With every client on the same basis the hetero path must agree with
+    the shared-basis factored sync (the transfer Grams become identity)."""
+    r, dim, k = 4, 24, 5
+    v_stack = _structured_stack(jax.random.PRNGKey(4), proj.RIGHT, k=k, r=r)
+    basis = proj.random_basis(0, dim, r)
+    b_stack = jnp.broadcast_to(basis, (k,) + basis.shape)
+    shared = sync.sync_block_synced_factored(protocol, v_stack, proj.RIGHT,
+                                             rank=r)
+    het = sync.sync_block_hetero_factored(protocol, v_stack, b_stack,
+                                          proj.RIGHT, rank=r)
+    assert jnp.allclose(het, shared, atol=1e-5)
+
+
+def test_hetero_factored_stacked_blocks():
+    """Stacked scan blocks (C, nb, ·, r) vmap over the layer dim."""
+    r, dim, k, nb = 4, 24, 5, 2
+    v4 = jnp.stack([_structured_stack(jax.random.PRNGKey(i), proj.RIGHT,
+                                      k=k, r=r) for i in range(nb)], axis=1)
+    b4 = jnp.stack([_hetero_bases(jax.random.PRNGKey(10 + i), k, dim, r)
+                    for i in range(nb)], axis=1)
+    out = sync.sync_block_hetero_factored("ajive", v4, b4, proj.RIGHT, rank=r)
+    assert out.shape == v4.shape[1:]
+    for i in range(nb):
+        single = sync.sync_block_hetero_factored("ajive", v4[:, i], b4[:, i],
+                                                 proj.RIGHT, rank=r)
+        assert jnp.allclose(out[i], single, atol=1e-6)
+
+
+def test_hetero_factored_none():
+    v_stack = _structured_stack(jax.random.PRNGKey(5), proj.RIGHT)
+    b_stack = _hetero_bases(jax.random.PRNGKey(6), 5, 24, 4)
+    assert sync.sync_block_hetero_factored("none", v_stack, b_stack,
+                                           proj.RIGHT) is None
