@@ -23,6 +23,15 @@ many-small-federated-scenarios serving regime) additionally shows the
 fused→scan win: once the round is a single program, per-round dispatch +
 host metric sync is the remaining overhead, and the K-round scan amortizes
 it to one dispatch per sweep.
+
+Cohort sweep (``bench_cohort``): the factored-client memory model's scaling
+axis. Sweeps C ∈ {8, 64, 512} through the chunk-streamed fused round on a
+wide-block problem, reporting wall-clock alongside **peak client-buffer
+bytes** (the persistent per-client round state the factored representation
+shrinks from O(C·m·n) to O(C·r(m+n))), against the retired dense-stack model
+at C=8. Acceptance: the C=512 factored round completes with client buffers
+within 4× the old C=8 dense configuration, and factored-vs-dense round
+parity ≤ 1e-5 at C=8.
 """
 from __future__ import annotations
 
@@ -139,6 +148,84 @@ def bench_engine(clients, regime="dispatch", rounds_timed=10, rank=4,
     return rows
 
 
+COHORT_CLIENTS = (8, 64, 512)
+COHORT_WIDTH = 512      # wide blocks: the regime where O(m·n) vs O(r(m+n))
+COHORT_RANK = 4         # per-client state is the whole story
+COHORT_CHUNK = 32       # B: dense transient working set bounded by 32 clients
+
+
+def _tree_maxerr(a, b):
+    return max(float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                     - y.astype(jnp.float32))))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def bench_cohort(clients=COHORT_CLIENTS, rounds_timed=2):
+    """Cohort-size sweep of the factored chunk-streamed round (fedgalore,
+    T=1) vs the retired dense-stack client model at C=8: wall-clock + peak
+    client-buffer bytes + factored-vs-dense parity."""
+    n_blocks, width, local_steps, b = 2, COHORT_WIDTH, 1, 2
+    params, loss, batches = _engine_problem(n_blocks, width)
+
+    def make(factored, chunk=None):
+        # Cohort size comes from the batch leading dim at run_round time.
+        return FedEngine(FedConfig(method="fedgalore", rank=COHORT_RANK,
+                                   lr=1e-2, local_steps=local_steps,
+                                   factored_clients=factored,
+                                   client_chunk=chunk), loss, params)
+
+    def run(eng, c, n_rounds, offset=0):
+        t0 = time.perf_counter()
+        for r in range(n_rounds):
+            eng.run_round(batches(offset + r, c, local_steps, b))
+        return (time.perf_counter() - t0) / n_rounds
+
+    rows = []
+    # The old configuration: dense per-client weight stacks, C=8, one chunk.
+    dense8 = make(factored=False)
+    run(dense8, 8, 2)                                  # compile + round 1
+    dense8_s = run(dense8, 8, rounds_timed, offset=10)
+    dense8_bytes = dense8.client_buffer_bytes()
+    rows.append({"engine": "FedEngine", "sweep": "cohort", "clients": 8,
+                 "client_model": "dense", "chunk": None,
+                 "round_s": dense8_s, "client_buffer_bytes": dense8_bytes})
+    emit("round_e2e/cohort_c8_dense", dense8_s * 1e6,
+         f"buffer_bytes={dense8_bytes}")
+
+    # Factored-vs-dense parity at C=8 (identical batches, 2 rounds).
+    fact8 = make(factored=True)
+    dense8b = make(factored=False)
+    for r in range(2):
+        fact8.run_round(batches(r, 8, local_steps, b))
+        dense8b.run_round(batches(r, 8, local_steps, b))
+    parity = max(_tree_maxerr(fact8.global_trainable, dense8b.global_trainable),
+                 _tree_maxerr(fact8.synced_v, dense8b.synced_v))
+
+    for c in clients:
+        eng = make(factored=True, chunk=min(COHORT_CHUNK, c))
+        run(eng, c, 2)
+        sec = run(eng, c, rounds_timed, offset=10)
+        nbytes = eng.client_buffer_bytes()
+        rows.append({"engine": "FedEngine", "sweep": "cohort", "clients": c,
+                     "client_model": "factored", "chunk": min(COHORT_CHUNK, c),
+                     "round_s": sec, "client_buffer_bytes": nbytes,
+                     "buffer_vs_c8_dense": nbytes / dense8_bytes})
+        emit(f"round_e2e/cohort_c{c}_factored", sec * 1e6,
+             f"buffer_bytes={nbytes} "
+             f"vs_c8_dense={nbytes / dense8_bytes:.2f}x")
+    c512 = next(r for r in rows if r["clients"] == max(clients)
+                and r["client_model"] == "factored")
+    return rows, {
+        "cohort_cmax": max(clients),
+        "cohort_cmax_round_s": c512["round_s"],
+        "cohort_cmax_buffer_bytes": c512["client_buffer_bytes"],
+        "c8_dense_buffer_bytes": dense8_bytes,
+        "cohort_buffer_ratio_cmax_vs_c8_dense": c512["buffer_vs_c8_dense"],
+        "factored_parity_c8": parity,
+    }
+
+
 def bench_runtime(clients, local_steps=2, rounds_timed=3):
     from repro.configs import get_config, smoke_variant
     from repro.fedsim import ShardedFederation
@@ -201,12 +288,14 @@ def main(clients=(4, 8, 16), out_path="bench_round_e2e.json",
         clients = tuple(c for c in clients if c <= 8) or (4, 8)
     rows = bench_engine(clients, regime="compute")
     rows += bench_engine(clients, regime="dispatch")
+    cohort_rows, cohort_acc = bench_cohort()
+    rows += cohort_rows
     if include_runtime:
         rows += bench_runtime(clients if not smoke else (4,))
 
     def row(regime, c):
         return next(r for r in rows if r["engine"] == "FedEngine"
-                    and r["regime"] == regime and r["clients"] == c)
+                    and r.get("regime") == regime and r["clients"] == c)
 
     c8c, c8d = row("compute", 8), row("dispatch", 8)
     result = {
@@ -221,6 +310,7 @@ def main(clients=(4, 8, 16), out_path="bench_round_e2e.json",
                 str(c): row("dispatch", c)["scan_speedup_vs_fused"]
                 for c in clients},
             "scan_speedup_vs_eager_k10_c8": c8d["eager_s"] / c8d["scan_s"],
+            **cohort_acc,
         },
     }
     with open(out_path, "w") as f:

@@ -11,6 +11,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from . import projector as proj
 from .lora import LoraPair, is_lora_pair, svd_truncate
 
 PyTree = Any
@@ -116,6 +117,38 @@ def fr_lora_merge(base_params: PyTree, stacked_adapters: PyTree, weights,
 def dense_delta_average(stacked_deltas: PyTree, weights) -> PyTree:
     """FedAvg on dense target-module deltas (FedAvg-Full / FedGaLore line 11)."""
     return weighted_average(stacked_deltas, weights)
+
+
+def factored_lift_average(delta_stack: jnp.ndarray, basis: jnp.ndarray,
+                          side: str, weights) -> jnp.ndarray:
+    """𝒜 for rank-r factored client deltas on a **shared** basis:
+    ``Σᵢ wᵢ lift(Rᵢ, B) = lift(Σᵢ wᵢ Rᵢ, B)`` — an O(C·r·dim) reduction in
+    projected coordinates plus ONE rank-r lift, instead of the O(C·m·n)
+    dense-stack average. delta_stack (C, m, r) right | (C, r, n) left;
+    returns the dense (m, n) weighted mean delta (fp32)."""
+    w = _norm_weights(weights)
+    rbar = jnp.einsum("k,k...->...", w, delta_stack.astype(jnp.float32))
+    return proj.project_back(rbar, basis.astype(jnp.float32), side)
+
+
+def factored_lift_average_hetero(delta_stack: jnp.ndarray,
+                                 basis_stack: jnp.ndarray, side: str,
+                                 weights) -> jnp.ndarray:
+    """𝒜 for factored deltas with **per-client** bases (the adaptive round-0
+    data-driven refresh, or ``refresh_mode='svd'``): ``Σᵢ wᵢ lift(Rᵢ, Bᵢ)``
+    contracted client-by-client — O(C·m·n·r) FLOPs but only the (m, n) output
+    is ever materialized (no (C, m, n) stack). basis_stack (C, dim, r);
+    stacked scan blocks (C, nb, ·, r) vmap over nb."""
+    if delta_stack.ndim == 4:
+        return jax.vmap(
+            lambda d, b: factored_lift_average_hetero(d, b, side, weights),
+            in_axes=1, out_axes=0)(delta_stack, basis_stack)
+    w = _norm_weights(weights)
+    d32 = delta_stack.astype(jnp.float32)
+    b32 = basis_stack.astype(jnp.float32)
+    if side == proj.RIGHT:
+        return jnp.einsum("k,kmr,knr->mn", w, d32, b32)
+    return jnp.einsum("k,kmr,krn->mn", w, b32, d32)
 
 
 def truncate_to_rank(deltas: PyTree, rank: int) -> PyTree:

@@ -24,17 +24,29 @@ Execution model
 ---------------
 The default round is **whole-round fused**: InitState (Eq. 5 — fresh moments,
 installed synced ṽ, bucketed projector refresh), T local steps, aggregation 𝒜
-and state sync 𝒮 lower as ONE jitted program per round, with the stacked
-``(C, …)`` client trainable/opt-state buffers donated back in every call so
-XLA reuses their memory for the round's outputs (no per-round re-stack, no
-doubled peak). 𝒮 never leaves projected coordinates: shared-basis rounds run
-the factored protocols, and the adaptive round-0 diverged-basis case runs the
-heterogeneous-basis factored sync (r×r transfer Grams — no dense ``(C, m, n)``
-lift anywhere). :meth:`FedEngine.run_rounds` additionally drives K rounds as a
-single ``lax.scan`` dispatch for benchmark sweeps. ``FedConfig.fused_round=
-False`` (or ``factored_sync=False``) restores the eager stage-by-stage
-reference round — the parity oracle, and the only path that executes the
-dense per-client lift."""
+and state sync 𝒮 lower as ONE jitted program per round, with the persistent
+client buffers donated back in every call so XLA reuses their memory for the
+round's outputs. For the GaLore methods those buffers are **rank-r factored**:
+within a round every local update lives in the shared rank-r subspace, so a
+client carries only the (m, r)/(r, n) accumulator ``R_i`` around the broadcast
+global base — the local step reads ``W_i = base_scale·W + lift(R_i)``
+transiently, decoupled weight decay rides the scalar ``base_scale =
+(1-ηλ)^t``, and 𝒜 collapses to ``base_scale·W + Σ wᵢ lift(Rᵢ)`` (O(C·r(m+n))
+state and reduction instead of O(C·m·n); see ``galore.factored_adamw_step``).
+On top of that the round **streams the cohort in chunks**: with
+``FedConfig.client_chunk=B`` the fused program scans over C/B client chunks,
+so the dense forward/backward working set scales with B while the factored
+per-client results accumulate at O(C·r(m+n)) — cohort size is decoupled from
+peak memory (C≈512 on a laptop-class host). 𝒮 never leaves projected
+coordinates: shared-basis rounds run the factored protocols, and the adaptive
+round-0 diverged-basis case runs the heterogeneous-basis factored sync (r×r
+transfer Grams — no dense ``(C, m, n)`` lift anywhere).
+:meth:`FedEngine.run_rounds` additionally drives K rounds as a single
+``lax.scan`` dispatch for benchmark sweeps. ``FedConfig.factored_clients=
+False`` keeps the fused round on dense per-client weight stacks;
+``fused_round=False`` (or ``factored_sync=False``) restores the eager
+stage-by-stage reference round — the dense-buffer parity oracle, and the only
+path that executes the dense per-client lift."""
 from __future__ import annotations
 
 import dataclasses
@@ -109,6 +121,14 @@ class FedConfig:
     use_pallas: Optional[bool] = None
     factored_sync: bool = True
     fused_round: bool = True
+    # Client memory model of the fused round (module docstring). With
+    # factored_clients (GaLore methods only) clients persist rank-r
+    # accumulators instead of dense weight copies; False keeps the dense
+    # stacked round (the in-fused-path oracle). client_chunk=B streams the
+    # cohort through the round in C/B chunks (B must divide C; None = one
+    # chunk), bounding the dense transient working set by B clients.
+    factored_clients: bool = True
+    client_chunk: Optional[int] = None
 
 
 # ------------------------------------------------------------ trainables ----
@@ -187,11 +207,21 @@ class FedEngine:
             out_axes=(0, self._opt_axes, 0)))
         self.round_idx = 0
         self.synced_v = None   # lifted+projected ṽ init from 𝒮
-        # Whole-round fused program state: the stacked (C, …) client buffers
-        # are donated back into every round call (their memory is reused for
+        # Factored-delta clients (module docstring): GaLore methods whose
+        # trainable is entirely target blocks carry rank-r accumulators
+        # instead of dense per-client weight copies in the fused round.
+        self._factored = False
+        if cfg.factored_clients and self.spec.optimizer == "galore_adamw":
+            st_shape = jax.eval_shape(
+                lambda: self.tx.init(self.global_trainable))
+            self._factored = gal.all_blocks_projected(
+                gal.galore_state_of(st_shape))
+        # Whole-round fused program state: the persistent client buffers —
+        # factored (C, ·, r) accumulators or dense (C, m, n) stacks — are
+        # donated back into every round call (their memory is reused for
         # the round's outputs), and the jitted round / scan-over-rounds
         # drivers are built lazily on first use.
-        self._client_trainable = None
+        self._client_state = None
         self._client_opt = None
         self._round_jit = None
         self._rounds_scan_jit = None
@@ -257,33 +287,12 @@ class FedEngine:
         """vmap axes tree for the optimizer state: 0 everywhere except the
         GaLore counter/seed, which stay scalar (see __init__)."""
         st = jax.eval_shape(lambda: self.tx.init(self.global_trainable))
-
-        def per_state(s):
-            if isinstance(s, gal.GaloreState):
-                return gal.GaloreState(
-                    count=None, seed=None,
-                    blocks=jax.tree_util.tree_map(lambda _: 0, s.blocks))
-            return jax.tree_util.tree_map(lambda _: 0, s)
-
-        if isinstance(st, gal.GaloreState):
-            return per_state(st)
-        return tuple(per_state(s) for s in st)
+        return gal.client_opt_axes(st)
 
     def _stack_opt_state(self, st, n_clients: int):
         """Broadcast one InitState along the client axis, honoring the
         unbatched-count/seed layout of :meth:`_client_opt_axes`."""
-        bcast = lambda x: jnp.broadcast_to(x, (n_clients,) + x.shape)
-
-        def per_state(s):
-            if isinstance(s, gal.GaloreState):
-                return gal.GaloreState(
-                    count=s.count, seed=s.seed,
-                    blocks=jax.tree_util.tree_map(bcast, s.blocks))
-            return jax.tree_util.tree_map(bcast, s)
-
-        if isinstance(st, gal.GaloreState):
-            return per_state(st)
-        return tuple(per_state(s) for s in st)
+        return gal.stack_opt_state(st, n_clients)
 
     def _init_client_opt_states(self, n_clients: int):
         """Round-start InitState for all clients. States are identical by
@@ -313,14 +322,14 @@ class FedEngine:
 
         self._ensure_client_buffers(k_clients)
         out = self._round_jitted()(
-            self._client_trainable, self._client_opt, self.global_trainable,
+            self._client_state, self._client_opt, self.global_trainable,
             self.frozen, self.synced_v,
             jnp.asarray(self.round_idx, jnp.int32), client_batches, w)
         if self._frozen_mutates():
-            (self._client_trainable, self._client_opt, self.global_trainable,
+            (self._client_state, self._client_opt, self.global_trainable,
              self.frozen, self.synced_v, losses) = out
         else:
-            (self._client_trainable, self._client_opt, self.global_trainable,
+            (self._client_state, self._client_opt, self.global_trainable,
              self.synced_v, losses) = out
         self.round_idx += 1
         return {"local_loss": losses,                      # (K, T)
@@ -407,11 +416,14 @@ class FedEngine:
             v_tree, is_leaf=lambda x: x is None)
 
     def _ensure_client_buffers(self, k_clients: int):
-        """Allocate the persistent stacked (C, …) client buffers once; every
-        fused round donates them back and adopts the round's outputs."""
-        have = (self._client_trainable is not None
+        """Allocate the persistent client buffers once; every fused round
+        donates them back and adopts the round's outputs. Factored clients
+        persist the rank-r (C, ·, r) accumulator stacks (O(C·r(m+n)) bytes);
+        the dense (C, m, n) weight stacks survive only under
+        ``factored_clients=False``."""
+        have = (self._client_state is not None
                 and jax.tree_util.tree_leaves(
-                    self._client_trainable)[0].shape[0] == k_clients)
+                    self._client_state)[0].shape[0] == k_clients)
         if have:
             return
         # Shapes only — no device work: the buffer values are never read
@@ -419,30 +431,168 @@ class FedEngine:
         st = jax.eval_shape(lambda: self._stack_opt_state(
             self._init_state0(0, None, self.global_trainable), k_clients))
         zeros = lambda s: jnp.zeros(s.shape, s.dtype)
-        self._client_trainable = jax.tree_util.tree_map(
-            lambda x: jnp.zeros((k_clients,) + x.shape, x.dtype),
-            self.global_trainable)
+        if self._factored:
+            # The stacked moments already carry the (C, ·, r) accumulator
+            # shapes — the factored client buffer mirrors them.
+            self._client_state = gal.zero_client_deltas(
+                gal.galore_state_of(st))
+        else:
+            self._client_state = jax.tree_util.tree_map(
+                lambda x: jnp.zeros((k_clients,) + x.shape, x.dtype),
+                self.global_trainable)
         self._client_opt = jax.tree_util.tree_map(zeros, st)
+
+    def client_buffer_bytes(self) -> int:
+        """Bytes held by the persistent per-client round buffers (the cohort
+        memory the factored representation shrinks) — the bench metric."""
+        total = 0
+        for tree in (self._client_state, self._client_opt):
+            if tree is not None:
+                total += sum(x.nbytes
+                             for x in jax.tree_util.tree_leaves(tree))
+        return total
+
+    def _chunk_size(self, k_clients: int) -> int:
+        b = self.cfg.client_chunk or k_clients
+        if k_clients % b:
+            raise ValueError(f"client_chunk={b} must divide the cohort size "
+                             f"{k_clients}")
+        return b
+
+    def _local_train_factored_one(self, deltas, opt_state, batches, frozen,
+                                  global_trainable):
+        """T factored local steps on one client (lax.scan): the client never
+        holds a persistent dense weight copy — every step reads
+        ``base_scale·W_global + lift(R_i)`` transiently and updates only the
+        rank-r accumulator (galore.factored_adamw_step)."""
+        c = self.cfg
+
+        def step(carry, batch):
+            dl, scale, st = carry
+            tr = gal.lift_client_trainable(global_trainable, dl,
+                                           gal.galore_state_of(st), scale)
+            loss, grads = jax.value_and_grad(self._trainable_loss)(
+                tr, batch, frozen)
+            dl, scale, st = gal.factored_adamw_step(
+                self.galore_cfg, grads, st, dl, scale, lr=c.lr,
+                weight_decay=c.weight_decay, clip_norm=c.clip_norm)
+            return (dl, scale, st), loss
+
+        (deltas, scale, opt_state), losses = jax.lax.scan(
+            step, (deltas, jnp.ones([], jnp.float32), opt_state), batches)
+        return deltas, opt_state, losses, scale
+
+    def _aggregate_factored(self, global_trainable, out_deltas, out_opt,
+                            base_scales, w, round_idx):
+        """𝒜 for factored clients: ``(Σᵢ wᵢ sᵢ)·W + Σᵢ wᵢ lift(Rᵢ, Bᵢ)`` per
+        target leaf (``sᵢ`` the per-client decayed base scales — identical
+        under a constant lr, per-client under a schedule). Shared-basis
+        rounds reduce in projected coordinates and lift once; the adaptive
+        round-0 diverged-basis case contracts the per-client lifts
+        client-by-client (a ``lax.cond``, mirroring
+        :meth:`_sync_states_pure`) — no (C, m, n) stack either way."""
+        bases = gal.extract_bases(gal.galore_state_of(out_opt))
+        round0_hetero = (self.galore_cfg.adaptive_steps > 0
+                         and self.galore_cfg.refresh_mode != "random")
+        sbar = jnp.einsum("c,c->", w, base_scales.astype(jnp.float32))
+
+        def one(w0, d_stack, b_stack):
+            side = (proj.RIGHT if d_stack.shape[-1] == b_stack.shape[-1]
+                    else proj.LEFT)
+
+            def shared(_):
+                return agg.factored_lift_average(d_stack, b_stack[0], side, w)
+
+            def hetero(_):
+                return agg.factored_lift_average_hetero(d_stack, b_stack,
+                                                        side, w)
+
+            if round0_hetero:
+                lifted = jax.lax.cond(round_idx == 0, hetero, shared,
+                                      operand=None)
+            else:
+                lifted = shared(None)
+            return (sbar * w0.astype(jnp.float32) + lifted).astype(w0.dtype)
+
+        return jax.tree_util.tree_map(one, global_trainable, out_deltas,
+                                      bases)
 
     def _round_core(self, global_trainable, frozen, synced_v, round_idx,
                     client_batches, w):
         """The whole federated round as a pure function: InitState → T local
-        steps (vmapped clients) → 𝒜 → factored 𝒮. Shared by the per-round
-        jitted program and the scan-over-rounds driver."""
+        steps (vmapped clients, streamed over cohort chunks) → 𝒜 → factored
+        𝒮. Shared by the per-round jitted program and the scan-over-rounds
+        driver.
+
+        Chunk streaming: the cohort is reshaped (C, …) → (C/B, B, …) and a
+        ``lax.scan`` runs the B-client vmapped local phase per chunk, so the
+        dense forward/backward working set is bounded by B clients while the
+        per-client results — factored accumulators, projected moments,
+        losses — stack to the full (C, …) cohort (each client's computation
+        is independent, so chunked ≡ unchunked client-for-client). 𝒜 and 𝒮
+        then run once on the full factored stacks, keeping them bit-identical
+        across chunk sizes."""
         k_clients = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
-        stacked = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x, (k_clients,) + x.shape),
-            global_trainable)
+        b = self._chunk_size(k_clients)
+        n_chunks = k_clients // b
         st0 = self._init_state0(round_idx, synced_v, global_trainable)
-        opt_states = self._stack_opt_state(st0, k_clients)
-        out_tr, out_opt, losses = jax.vmap(
-            self._local_train_one, in_axes=(0, self._opt_axes, 0, None),
-            out_axes=(0, self._opt_axes, 0))(
-            stacked, opt_states, client_batches, frozen)
+        opt0 = self._stack_opt_state(st0, b)
+
+        def stream(local_fn, batches):
+            """Run the B-client vmapped local phase over the cohort: directly
+            for a single chunk, as a lax.scan over C/B chunks otherwise, and
+            reassemble the full (C, …) stacks either way."""
+            if n_chunks == 1:
+                return local_fn(batches)
+            cb = jax.tree_util.tree_map(
+                lambda x: x.reshape((n_chunks, b) + x.shape[1:]), batches)
+            _, out = jax.lax.scan(
+                lambda carry, batch_c: (carry, local_fn(batch_c)), None, cb)
+            unchunk = lambda x: x.reshape((k_clients,) + x.shape[2:])
+            out_x, opt_s, loss_s = out[0], out[1], out[2]
+            merged = (jax.tree_util.tree_map(unchunk, out_x),
+                      gal.unchunk_opt_state(opt_s, k_clients),
+                      unchunk(loss_s))
+            if len(out) == 4:                     # factored: (C,) base scales
+                merged += (out[3].reshape((k_clients,)),)
+            return merged
+
+        if self._factored:
+            deltas0 = self._stack_deltas0(st0, b)
+
+            def local_fn(batch_c):
+                return jax.vmap(
+                    self._local_train_factored_one,
+                    in_axes=(0, self._opt_axes, 0, None, None),
+                    out_axes=(0, self._opt_axes, 0, 0))(
+                    deltas0, opt0, batch_c, frozen, global_trainable)
+
+            out_d, out_opt, losses, scales = stream(local_fn, client_batches)
+            new_global = self._aggregate_factored(
+                global_trainable, out_d, out_opt, scales, w, round_idx)
+            new_synced = self._sync_states_pure(out_opt, w, round_idx)
+            return out_d, out_opt, new_global, frozen, new_synced, losses
+
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (b,) + x.shape), global_trainable)
+
+        def local_fn(batch_c):
+            return jax.vmap(
+                self._local_train_one, in_axes=(0, self._opt_axes, 0, None),
+                out_axes=(0, self._opt_axes, 0))(
+                stacked, opt0, batch_c, frozen)
+
+        out_tr, out_opt, losses = stream(local_fn, client_batches)
         new_global, new_frozen = self._aggregate_pure(out_tr, w, frozen,
                                                       round_idx)
         new_synced = self._sync_states_pure(out_opt, w, round_idx)
         return out_tr, out_opt, new_global, new_frozen, new_synced, losses
+
+    def _stack_deltas0(self, st0, n: int):
+        """Zero round-start factored accumulators for n clients."""
+        d0 = gal.zero_client_deltas(gal.galore_state_of(st0))
+        return jax.tree_util.tree_map(
+            lambda x: jnp.zeros((n,) + x.shape, x.dtype), d0)
 
     def _frozen_mutates(self) -> bool:
         """Only the lift aggregations (FLoRA / FR-LoRA) write the frozen

@@ -193,7 +193,8 @@ def _projected_adam(cfg: GaloreConfig, gt, m, v, count):
 
 
 def _block_update(cfg: GaloreConfig, g, st: GaloreBlockState, count,
-                  refresh_idx, do_refresh, seed, block_id):
+                  refresh_idx, do_refresh, seed, block_id,
+                  project_back: bool = True):
     side = proj.proj_side(g.shape)
     rank = st.basis.shape[-1]
     g32 = g.astype(jnp.float32)
@@ -206,7 +207,7 @@ def _block_update(cfg: GaloreConfig, g, st: GaloreBlockState, count,
 
     gt = proj.project(g32, st.basis, side)
     m, v, ut = _projected_adam(cfg, gt, st.m, st.v, count)
-    u = proj.project_back(ut, st.basis, side)
+    u = proj.project_back(ut, st.basis, side) if project_back else ut
     return u, GaloreBlockState(basis=st.basis, m=m, v=v)
 
 
@@ -222,7 +223,8 @@ def _resolve_use_pallas(cfg: GaloreConfig) -> bool:
 
 
 def _bucketed_update(cfg: GaloreConfig, use_pallas: bool, g_leaves,
-                     blk_leaves, count, refresh_idx, do_refresh, seed):
+                     blk_leaves, count, refresh_idx, do_refresh, seed,
+                     project_back: bool = True):
     """Shape-bucketed batched GaLore step (the fused default).
 
     Target blocks with identical (shape, rank) share one stacked state bucket:
@@ -231,6 +233,9 @@ def _bucketed_update(cfg: GaloreConfig, use_pallas: bool, g_leaves,
     bucket in one batched call. Per-block seeded keys fold in the *original*
     leaf index, so every basis is bit-identical to the per-leaf reference loop
     (the server-broadcast-a-seed protocol is unaffected by bucketing).
+    ``project_back=False`` keeps the update in projected coordinates (ũ,
+    shaped like the moments) — the factored-delta client path, where the
+    ambient lift is deferred to the weight read.
     """
     n_leaves = len(blk_leaves)
     updates = [None] * n_leaves
@@ -299,12 +304,15 @@ def _bucketed_update(cfg: GaloreConfig, use_pallas: bool, g_leaves,
             # One fused VMEM-resident pass per bucket (vmapped over the
             # bucket's leading dim -> an extra grid dimension, not a loop).
             # Stacking the gradients costs one extra read/write of g, which
-            # the kernel's saved inter-stage HBM round-trips repay.
+            # the kernel's saved inter-stage HBM round-trips repay. With
+            # project_back=False the kernel skips the final lift GEMM and
+            # emits ũ in the moment shape.
             u, m, v = kops.galore_precond_step(
                 stacked_g(), basis, m, v, count.astype(jnp.float32),
                 side=side, b1=cfg.b1, b2=cfg.b2, eps=cfg.eps,
                 block_rows=cfg.pallas_block_rows,
-                bias_correction=cfg.bias_correction)
+                bias_correction=cfg.bias_correction,
+                project_back=project_back)
             for j, i in enumerate(idxs):
                 updates[i] = u[j]
                 new_blocks[i] = GaloreBlockState(basis=basis[j], m=m[j],
@@ -318,10 +326,53 @@ def _bucketed_update(cfg: GaloreConfig, use_pallas: bool, g_leaves,
         for j, i in enumerate(idxs):
             gt = proj.project(g_leaves[i].astype(jnp.float32), basis[j], side)
             mj, vj, ut = _projected_adam(cfg, gt, m[j], v[j], count)
-            updates[i] = proj.project_back(ut, basis[j], side)
+            updates[i] = (proj.project_back(ut, basis[j], side)
+                          if project_back else ut)
             new_blocks[i] = GaloreBlockState(basis=basis[j], m=mj, v=vj)
 
     return updates, new_blocks
+
+
+def galore_transform_update(cfg: GaloreConfig, grads, state: GaloreState,
+                            project_back: bool = True):
+    """One GaLore preconditioning step as a pure function (the
+    ``scale_by_galore`` update body): in-step ``count % τ`` refresh, projected
+    Adam moments, update direction. With the default ``project_back=True``
+    target-block updates are lifted back to ambient shape (the dense chain
+    API). ``project_back=False`` returns them as the *projected* ũ (shaped
+    like the moments) — the factored-delta client path, which keeps the whole
+    local step in rank-r coordinates and defers the lift to the weight read.
+    Non-target (``DenseMoments``) leaves are plain Adam either way."""
+    count = state.count + 1
+    refresh_idx = state.count // cfg.refresh_every
+    do_refresh = (state.count % cfg.refresh_every) == 0
+
+    leaves = jax.tree_util.tree_flatten_with_path(grads)[0]
+    treedef = jax.tree_util.tree_structure(grads)
+    blk_leaves = jax.tree_util.tree_leaves(
+        state.blocks, is_leaf=lambda x: isinstance(x, (GaloreBlockState,
+                                                       DenseMoments)))
+    if cfg.fused:
+        updates, new_blocks = _bucketed_update(
+            cfg, _resolve_use_pallas(cfg), [g for _, g in leaves],
+            blk_leaves, count, refresh_idx, do_refresh, state.seed,
+            project_back=project_back)
+    else:
+        updates, new_blocks = [], []
+        for block_id, ((path, g), st) in enumerate(zip(leaves,
+                                                       blk_leaves)):
+            if isinstance(st, GaloreBlockState):
+                u, nst = _block_update(cfg, g, st, count, refresh_idx,
+                                       do_refresh, state.seed, block_id,
+                                       project_back=project_back)
+            else:
+                u, nst = _dense_update(cfg, g, st, count)
+            updates.append(u)
+            new_blocks.append(nst)
+    return (jax.tree_util.tree_unflatten(treedef, updates),
+            GaloreState(count=count, seed=state.seed,
+                        blocks=jax.tree_util.tree_unflatten(treedef,
+                                                            new_blocks)))
 
 
 def scale_by_galore(cfg: GaloreConfig,
@@ -336,33 +387,7 @@ def scale_by_galore(cfg: GaloreConfig,
 
     def update(grads, state, params=None):
         del params
-        count = state.count + 1
-        refresh_idx = state.count // cfg.refresh_every
-        do_refresh = (state.count % cfg.refresh_every) == 0
-
-        leaves = jax.tree_util.tree_flatten_with_path(grads)[0]
-        treedef = jax.tree_util.tree_structure(grads)
-        blk_leaves = jax.tree_util.tree_leaves(
-            state.blocks, is_leaf=lambda x: isinstance(x, (GaloreBlockState,
-                                                           DenseMoments)))
-        if cfg.fused:
-            updates, new_blocks = _bucketed_update(
-                cfg, _resolve_use_pallas(cfg), [g for _, g in leaves],
-                blk_leaves, count, refresh_idx, do_refresh, state.seed)
-        else:
-            updates, new_blocks = [], []
-            for block_id, ((path, g), st) in enumerate(zip(leaves,
-                                                           blk_leaves)):
-                if isinstance(st, GaloreBlockState):
-                    u, nst = _block_update(cfg, g, st, count, refresh_idx,
-                                           do_refresh, state.seed, block_id)
-                else:
-                    u, nst = _dense_update(cfg, g, st, count)
-                updates.append(u)
-                new_blocks.append(nst)
-        return (jax.tree_util.tree_unflatten(treedef, updates),
-                GaloreState(count=count, seed=state.seed,
-                            blocks=jax.tree_util.tree_unflatten(treedef, new_blocks)))
+        return galore_transform_update(cfg, grads, state, project_back=True)
 
     return GradientTransformation(init, update)
 
@@ -490,6 +515,185 @@ def manual_refresh(cfg: GaloreConfig, state: GaloreState, refresh_idx,
         out.append(GaloreBlockState(basis=new_basis, m=m, v=v))
     return GaloreState(count=state.count, seed=state.seed,
                        blocks=jax.tree_util.tree_unflatten(treedef, out))
+
+
+# --------------------------------------------- factored-delta client state --
+#
+# Within a federated round every GaLoreAdamW local update lives in the shared
+# rank-r subspace (the projector refreshes only at local step 0, where the
+# round-start delta is identically zero), so a client never needs a dense
+# per-client weight copy: its whole trainable state is the factored
+# accumulator R_i (shaped like the projected moments) around the broadcast
+# global base,
+#
+#     W_i(t) = base_scale(t) · W_global + lift(R_i(t), B_i),
+#     base_scale(t) = (1 - η λ)^t,
+#
+# with decoupled weight decay absorbed into the scalar ``base_scale`` so the
+# delta stays *exactly* rank-r (the dense AdamW recurrence
+# W ← (1-ηλ)W - η·lift(ũ) splits leaf-wise into base_scale and R_i because
+# the lift is linear). O(r(m+n)) persistent state per client per block
+# instead of O(m·n); aggregation closes over ``base_scale·W + Σ wᵢ lift(Rᵢ)``.
+
+
+def _moment_side(st: GaloreBlockState) -> str:
+    """Projected buffers are (rows, r) right / (r, cols) left (Appendix A.1)."""
+    return proj.RIGHT if st.m.shape[-1] == st.basis.shape[-1] else proj.LEFT
+
+
+def all_blocks_projected(state: GaloreState) -> bool:
+    """Whether every trainable leaf is a GaLore target block — the
+    precondition for the factored-delta client representation (a
+    ``DenseMoments`` leaf takes full-rank Adam updates that no rank-r
+    accumulator can carry)."""
+    leaves = jax.tree_util.tree_leaves(
+        state.blocks, is_leaf=lambda x: isinstance(x, (GaloreBlockState,
+                                                       DenseMoments)))
+    return all(isinstance(s, GaloreBlockState) for s in leaves)
+
+
+def zero_client_deltas(state: GaloreState) -> PyTree:
+    """Round-start factored accumulators R_i = 0, shaped like the projected
+    moments (works on concrete states and ``eval_shape`` pytrees alike)."""
+    def one(st):
+        return jnp.zeros(st.m.shape, jnp.float32)
+    return jax.tree_util.tree_map(
+        one, state.blocks,
+        is_leaf=lambda x: isinstance(x, (GaloreBlockState, DenseMoments)))
+
+
+def lift_client_trainable(base: PyTree, deltas: PyTree, state: GaloreState,
+                          base_scale) -> PyTree:
+    """The transient dense weight read ``base_scale·W + lift(R_i, B_i)`` per
+    target leaf — the only place a client's dense weights ever materialize
+    (inside the local step's forward/backward; never as persistent state)."""
+    def one(w0, d, st):
+        lifted = proj.project_back(d, st.basis.astype(jnp.float32),
+                                   _moment_side(st))
+        return (base_scale * w0.astype(jnp.float32) + lifted).astype(w0.dtype)
+    return jax.tree_util.tree_map(one, base, deltas, state.blocks)
+
+
+def factored_adamw_step(cfg: GaloreConfig, grads, opt_state, deltas,
+                        base_scale, *, lr, weight_decay: float = 0.0,
+                        clip_norm: Optional[float] = None):
+    """One GaLoreAdamW local step in factored-delta coordinates.
+
+    Mirrors the :func:`galore_adamw` chain (global-norm clip →
+    ``scale_by_galore`` → decoupled weight decay → lr) with the ambient lift
+    eliminated: the preconditioner emits the *projected* ũ
+    (``galore_transform_update(project_back=False)``) and the AdamW weight
+    recurrence is applied leaf-wise to the factored state,
+
+        R_i ← R_i − η(ũ + λ R_i),   base_scale ← base_scale − η λ base_scale.
+
+    Requires every trainable leaf to be a target block
+    (:func:`all_blocks_projected`) and the basis to be fixed whenever any
+    R_i ≠ 0 — i.e. projector refreshes may only fire at local step 0, where
+    the round-start accumulators are identically zero (``refresh_every %
+    local_steps == 0`` in the runtime; the engine refreshes only at round
+    boundaries). Returns ``(new_deltas, new_base_scale, new_opt_state)`` with
+    the optimizer state structurally identical to the dense chain's (the 𝒮 /
+    install / stacking machinery is representation-agnostic). With a schedule
+    ``lr`` the step size reads the chain's ``ScaleByLrState`` count, which is
+    batched per client — callers must treat ``base_scale`` as per-client
+    (vmap out axis 0); the aggregation consumes it as ``Σ wᵢ sᵢ``."""
+    from ..optim.base import ClipState, ScaleByLrState, global_norm
+    if isinstance(opt_state, GaloreState):
+        states = [opt_state]
+    else:
+        states = list(opt_state)
+    new_states = list(states)
+    if clip_norm is not None:
+        # Same arithmetic as optim.base.clip_by_global_norm on the dense
+        # gradients (the factored path changes the state, not the math).
+        gnorm = global_norm(grads)
+        cscale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
+        grads = jax.tree_util.tree_map(lambda g: g * cscale, grads)
+    gi = next(i for i, s in enumerate(states) if isinstance(s, GaloreState))
+    ut, new_states[gi] = galore_transform_update(cfg, grads, states[gi],
+                                                 project_back=False)
+    step_lr = None
+    for i, s in enumerate(states):
+        if isinstance(s, ScaleByLrState):
+            step_lr = lr(s.count) if callable(lr) else lr
+            new_states[i] = ScaleByLrState(count=s.count + 1)
+    if step_lr is None:
+        if callable(lr):
+            raise ValueError("a schedule lr needs the chain's ScaleByLrState "
+                             "to supply the step count")
+        step_lr = lr
+    new_deltas = jax.tree_util.tree_map(
+        lambda d, u: d - step_lr * (u + weight_decay * d), deltas, ut)
+    new_scale = base_scale - step_lr * weight_decay * base_scale
+    if isinstance(opt_state, GaloreState):
+        return new_deltas, new_scale, new_states[0]
+    return new_deltas, new_scale, tuple(new_states)
+
+
+# ----------------------------------------------- client-axis state layout ---
+#
+# Stacked client optimizer states keep the per-client moments/bases batched
+# along axis 0 but ride the GaLore step counter and round seed UNBATCHED:
+# they are identical across clients by construction, and a scalar count keeps
+# the in-step `count % τ` refresh a real `lax.cond` under the client vmap
+# (a batched predicate lowers to a select that computes the RSVD branch every
+# local step). These helpers are the single source of truth for that layout,
+# shared by the engine, the sharded runtime, and the dry-run.
+
+
+def map_opt_layout(opt_state, batched: Callable, scalar: Callable = lambda x: x):
+    """Map ``batched`` over the per-client leaves of a (possibly chained)
+    optimizer state and ``scalar`` over the unbatched GaLore count/seed."""
+    def per_state(s):
+        if isinstance(s, GaloreState):
+            return GaloreState(count=scalar(s.count), seed=scalar(s.seed),
+                               blocks=jax.tree_util.tree_map(batched,
+                                                             s.blocks))
+        return jax.tree_util.tree_map(batched, s)
+
+    if isinstance(opt_state, GaloreState):
+        return per_state(opt_state)
+    return tuple(per_state(s) for s in opt_state)
+
+
+def client_opt_axes(opt_state):
+    """The vmap in/out axes tree for a client-stacked optimizer state:
+    0 everywhere except the GaLore count/seed, which stay scalar."""
+    return map_opt_layout(opt_state, batched=lambda _: 0,
+                          scalar=lambda _: None)
+
+
+def stack_opt_state(opt_state, n_clients: int, copy: bool = False):
+    """Broadcast one optimizer state along the client axis in the
+    unbatched-count/seed layout. ``copy=True`` materializes real per-client
+    buffers (for eagerly-held state that will be donated)."""
+    def bcast(x):
+        out = jnp.broadcast_to(x, (n_clients,) + x.shape)
+        return out.copy() if copy else out
+    return map_opt_layout(opt_state, batched=bcast)
+
+
+def chunk_opt_state(opt_state, n_chunks: int, chunk: int):
+    """Reshape a client-stacked state (C, …) into chunk-streamed (n_chunks,
+    B, …) form for a ``lax.scan`` over cohort chunks. The unbatched
+    count/seed are broadcast along the chunk axis (every chunk starts the
+    round from the same scalar state) so they can ride the scan xs."""
+    return map_opt_layout(
+        opt_state,
+        batched=lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]),
+        scalar=lambda x: jnp.broadcast_to(x, (n_chunks,) + x.shape))
+
+
+def unchunk_opt_state(opt_state, n_clients: int):
+    """Inverse of :func:`chunk_opt_state` on scan-stacked chunk outputs:
+    merge (n_chunks, B, …) back to (C, …); collapse the chunk-replicated
+    scalars (identical across chunks — each chunk advances the same
+    round-start counter by the same T steps)."""
+    return map_opt_layout(
+        opt_state,
+        batched=lambda x: x.reshape((n_clients,) + x.shape[2:]),
+        scalar=lambda x: x[0])
 
 
 # ------------------------------------------------- fed-layer state access ---

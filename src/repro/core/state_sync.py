@@ -32,6 +32,12 @@ still closes the round-trip over per-client r×r transfer Grams ``Q_iᵀ Q_0``
 basis change into its score Gram (`ajive.ajive_sync_hetero_factored`). No
 default configuration executes a dense lift; :func:`sync_block` and the
 per-client dense lift remain as parity oracles.
+
+Chunk-streamed rounds (``core.fed`` / ``launch.steps`` with ``client_chunk``)
+assemble the full (C, ·, r) ṽ/basis stacks from per-chunk outputs before
+calling any protocol here — every 𝒮 input is the complete cohort uplink
+(O(C·r·dim), the factored payload, never a dense view), which keeps the
+synchronized result independent of the chunk size.
 """
 from __future__ import annotations
 

@@ -3,13 +3,30 @@
 Clients live on the (pod, data) mesh axes; each client's trainable copy is
 tensor-parallel over the model axis; the frozen base is FSDP-sharded
 (identical across clients). One `round_step` call runs the **whole round**
-inside the mesh: T local GaLoreAdamW steps per client (lax.scan), FedAvg
-aggregation via an all-reduce over the client axes, and the server-side state
-filter 𝒮 (Algorithm 1, line 12) — factored sync of the projected second
-moments, broadcast-free O(dim·r) install, seed bump. The round program never
-drops out of the mesh onto the host, and the jitted call donates the stacked
+inside the mesh: T local GaLoreAdamW steps per client (lax.scan), factored
+aggregation over the client axes, and the server-side state filter 𝒮
+(Algorithm 1, line 12) — factored sync of the projected second moments,
+broadcast-free O(dim·r) install, seed bump. The round program never drops
+out of the mesh onto the host, and the jitted call donates the stacked
 client buffers (global trainable + per-client optimizer states), so each
 round's outputs reuse the previous round's memory.
+
+Client memory model: with the default ``factored_clients=True`` a client's
+round state is the rank-r factored accumulator ``R_i`` around the shared
+global base — the local step reads ``base_scale·W + lift(R_i)`` transiently
+(decoupled weight decay rides the scalar ``base_scale``) and 𝒜 collapses to
+``base_scale·W + Σ wᵢ lift(Rᵢ)``, so no dense ``(C, m, n)`` per-client weight
+stack exists anywhere in the round program; per-client persistent state is
+O(r(m+n)) per block (the projected moments + basis). ``client_chunk=B``
+additionally streams the cohort through the round in C/B sequential chunks,
+bounding the dense forward/backward working set by B clients and decoupling
+cohort size from peak memory (C≈512 rounds on a single host). The stacked
+optimizer states ride the GaLore count/seed unbatched (``galore.
+stack_opt_state``), keeping the in-step refresh predicate scalar under the
+client vmap. ``factored_clients=False`` restores the dense per-client weight
+stacks (the parity oracle, and the required fallback when
+``refresh_every % local_steps != 0`` would let a mid-round refresh strand a
+non-zero accumulator on a stale basis).
 
 The server sync runs **factored** in every default configuration: the
 uplinked ṽ are synchronized directly in projected coordinates
@@ -35,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..core import galore as gal
 from ..launch import steps as steps_lib
 
 PyTree = Any
@@ -43,7 +61,9 @@ PyTree = Any
 class ShardedFederation:
     def __init__(self, cfg: ArchConfig, spec: steps_lib.TrainSpec, mesh,
                  n_clients: int, state_sync: str = "ajive", seed: int = 0,
-                 factored_sync: bool = True, fused_round: bool = True):
+                 factored_sync: bool = True, fused_round: bool = True,
+                 factored_clients: bool = True,
+                 client_chunk: Optional[int] = None):
         self.cfg = cfg
         self.spec = spec
         self.mesh = mesh
@@ -53,12 +73,28 @@ class ShardedFederation:
         self.fused_round = fused_round
         self.round_idx = 0
 
+        if client_chunk is not None:
+            # Chunks sequentialize the client dim, but each chunk's vmap
+            # still maps clients onto the mesh — B must cover the client
+            # axes or SPMD lowering fails with an opaque sharding error.
+            client_devices = 1
+            for a in spec.client_axes:
+                if a in mesh.shape:
+                    client_devices *= mesh.shape[a]
+            if client_chunk % client_devices:
+                raise ValueError(
+                    f"client_chunk={client_chunk} must be a multiple of the "
+                    f"client mesh axes size {client_devices} "
+                    f"(axes {spec.client_axes})")
+
         key = jax.random.PRNGKey(seed)
         self.global_trainable, self.frozen, opt_state = \
             steps_lib.init_train_state(key, cfg, spec)
-        self.opt_states = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape).copy(),
-            opt_state)
+        # Per-client moments/bases batched on axis 0; GaLore count/seed
+        # unbatched (identical across clients — scalar keeps the in-step
+        # refresh a real cond under the client vmap).
+        self.opt_states = gal.stack_opt_state(opt_state, n_clients,
+                                              copy=True)
         # Fused default: 𝒮 + install + seed bump lower inside the round
         # program; the stacked buffers are donated so round k+1's outputs
         # reuse round k's memory. state_sync=None lowers the legacy 𝒯𝒜-only
@@ -66,7 +102,8 @@ class ShardedFederation:
         self._round_core = steps_lib.make_fed_round_step(
             cfg, spec, n_clients,
             state_sync=(state_sync if fused_round else None),
-            factored_sync=factored_sync)
+            factored_sync=factored_sync,
+            factored_clients=factored_clients, client_chunk=client_chunk)
         self._round = jax.jit(self._round_core,
                               donate_argnums=(0, 2) if fused_round else ())
         self._rounds_scan = None

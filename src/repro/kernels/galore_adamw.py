@@ -94,13 +94,13 @@ def _step_kernel(count_ref, w_ref, g_ref, basis_ref, m_ref, v_ref,
 
 def _precond_kernel(count_ref, g_ref, basis_ref, m_ref, v_ref,
                     u_out, m_out, v_out, *, side, b1, b2, eps,
-                    bias_correction):
+                    bias_correction, project_back=True):
     g = g_ref[...].astype(jnp.float32)
     basis = basis_ref[...].astype(jnp.float32)
     gt = _project(g, basis, side)
     m, v, ut = _adam_update(gt, m_ref, v_ref, count_ref, b1, b2, eps,
                             bias_correction)
-    u_out[...] = _project_back(ut, basis, side)
+    u_out[...] = _project_back(ut, basis, side) if project_back else ut
     m_out[...] = m
     v_out[...] = v
 
@@ -184,22 +184,28 @@ def galore_adamw_step(w, g, basis, m, v, count, *, side=None, b1=0.9, b2=0.999,
 
 @functools.partial(jax.jit, static_argnames=("side", "b1", "b2", "eps",
                                              "block_rows", "interpret",
-                                             "bias_correction"))
+                                             "bias_correction",
+                                             "project_back"))
 def galore_precond_step(g, basis, m, v, count, *, side=None, b1=0.9, b2=0.999,
                         eps=1e-8, block_rows=128, interpret=False,
-                        bias_correction=True):
+                        bias_correction=True, project_back=True):
     """Fused project → Adam → project-back, returning the ambient update
     direction u (fp32) instead of applying it — the ``scale_by_galore`` hot
     path (lr / weight decay live elsewhere in the optimizer chain).
 
     Shapes as :func:`galore_adamw_step`; returns (u (M, N) fp32, m', v').
+    ``project_back=False`` skips the final lift GEMM and returns the
+    *projected* ũ in the moment shape ((M, r) right / (r, N) left) — the
+    factored-delta client path, whose rank-r accumulator consumes ũ directly
+    and never round-trips the dense (M, N) update through HBM.
     """
     side = side or infer_side(g.shape, basis.shape, m.shape)
     if g.ndim > 2:
         fn = functools.partial(galore_precond_step, side=side, b1=b1, b2=b2,
                                eps=eps, block_rows=block_rows,
                                interpret=interpret,
-                               bias_correction=bias_correction)
+                               bias_correction=bias_correction,
+                               project_back=project_back)
         return jax.vmap(lambda gg, bb, mm_, vv: fn(gg, bb, mm_, vv,
                                                    count))(g, basis, m, v)
 
@@ -209,14 +215,17 @@ def galore_precond_step(g, basis, m, v, count, *, side=None, b1=0.9, b2=0.999,
                                                       block_rows)
     count_arr = jnp.full((1, 1), count, jnp.float32)
     kernel = functools.partial(_precond_kernel, side=side, b1=b1, b2=b2,
-                               eps=eps, bias_correction=bias_correction)
+                               eps=eps, bias_correction=bias_correction,
+                               project_back=project_back)
+    u_spec = wg_spec if project_back else mv_spec
+    u_shape = g.shape if project_back else m.shape
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),
                   wg_spec, basis_spec, mv_spec, mv_spec],
-        out_specs=[wg_spec, mv_spec, mv_spec],
-        out_shape=[jax.ShapeDtypeStruct(g.shape, jnp.float32),
+        out_specs=[u_spec, mv_spec, mv_spec],
+        out_shape=[jax.ShapeDtypeStruct(u_shape, jnp.float32),
                    jax.ShapeDtypeStruct(m.shape, jnp.float32),
                    jax.ShapeDtypeStruct(v.shape, jnp.float32)],
         interpret=interpret,

@@ -79,6 +79,16 @@ def _stack_sds(tree, c: int):
         lambda x: jax.ShapeDtypeStruct((c,) + x.shape, x.dtype), tree)
 
 
+def _stack_opt_sds(opt_state, c: int):
+    """Client-stack an optimizer-state ShapeDtypeStruct tree in the runtime's
+    layout (``galore.stack_opt_state``): per-client moments/bases gain the
+    leading client dim; the GaLore count/seed stay unbatched scalars."""
+    from ..core import galore as gal
+    return gal.map_opt_layout(
+        opt_state,
+        batched=lambda x: jax.ShapeDtypeStruct((c,) + x.shape, x.dtype))
+
+
 def _client_shardings(mesh, rules_tp, tree, batch_axes):
     """Client-stacked leaves: client dim over (pod,data); inner dims by the
     TP-only param rules."""
@@ -90,8 +100,10 @@ def _client_shardings(mesh, rules_tp, tree, batch_axes):
 
 
 def _client_opt_shardings(mesh, tree, batch_axes, model_axis="model"):
-    """Client-stacked optimizer states: client dim over (pod,data); shard the
-    largest trailing dim over model when divisible; scalars replicate."""
+    """Client-stacked optimizer states (``_stack_opt_sds`` layout): per-client
+    ≥2-D leaves put the client dim over (pod,data) and shard the largest
+    trailing dim over model when divisible; the unbatched GaLore count/seed
+    scalars — and any other sub-2-D leaf — replicate (P())."""
     msize = mesh.shape[model_axis]
 
     def one(leaf):
@@ -142,7 +154,7 @@ def lower_combination(arch: str, shape_name: str, mesh,
             lambda: steps_lib.init_train_state(jax.random.PRNGKey(0), cfg, spec))
         trainable, frozen, opt_state = abstract
         trainable_c = _stack_sds(trainable, n_clients)
-        opt_c = _stack_sds(opt_state, n_clients)
+        opt_c = _stack_opt_sds(opt_state, n_clients)
         batch = input_specs(cfg, shape)
         n_text = batch["tokens"].shape[1]
         cbatch = {"tokens": jax.ShapeDtypeStruct((n_clients, per_client, n_text),
@@ -230,7 +242,7 @@ def lower_fed_round(arch: str, mesh,
     per_client = max(shape.global_batch // (n_clients * t_steps), 1)
     trainable, frozen, opt_state = jax.eval_shape(
         lambda: steps_lib.init_train_state(jax.random.PRNGKey(0), cfg, spec))
-    opt_c = _stack_sds(opt_state, n_clients)
+    opt_c = _stack_opt_sds(opt_state, n_clients)
     cbatch = {
         "tokens": jax.ShapeDtypeStruct(
             (n_clients, t_steps, per_client, shape.seq_len), jnp.int32),

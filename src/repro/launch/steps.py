@@ -17,6 +17,22 @@ synced-state install and seed bump for the next round. The paper's full
 onto the host. Passing ``state_sync=None`` lowers the legacy 𝒯→𝒜 program
 (raw end-of-round states returned; the caller syncs on the host — the eager
 reference path).
+
+Client memory model of the round program (mirrors ``core.fed``): with the
+default ``factored_clients=True`` every client's round state is the rank-r
+factored accumulator ``R_i`` around the broadcast global base — the local
+step reads ``base_scale·W + lift(R_i)`` transiently (weight decay rides the
+scalar ``base_scale``; ``galore.factored_adamw_step``), and 𝒜 collapses to
+``base_scale·W + Σ wᵢ lift(Rᵢ)`` with no dense (C, m, n) weight stack
+anywhere in the program. ``client_chunk=B`` streams the cohort through the
+round in C/B sequential chunks (a ``lax.scan`` over the chunked client axis),
+bounding the dense forward/backward working set by B clients. Stacked client
+optimizer states ride the GaLore count/seed UNBATCHED (``galore.
+stack_opt_state`` layout) so the in-step ``count % τ`` refresh stays a real
+``lax.cond`` under the client vmap. The factored client path requires every
+refresh to land on local step 0 (where R_i ≡ 0): ``refresh_every %
+local_steps == 0``; otherwise the dense client round (retained under
+``factored_clients=False`` as the parity oracle) is used.
 """
 from __future__ import annotations
 
@@ -28,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
+from ..core import aggregation as agg_lib
 from ..core import galore as gal
 from ..core import projector as proj
 from ..core import state_sync as sync_lib
@@ -89,11 +106,14 @@ class TrainSpec:
     client_axes: tuple = ("data",)
 
 
-def make_galore_tx(cfg: ArchConfig, spec: TrainSpec):
-    gcfg = gal.GaloreConfig(rank=spec.rank, refresh_every=spec.refresh_every,
+def make_galore_cfg(spec: TrainSpec) -> gal.GaloreConfig:
+    return gal.GaloreConfig(rank=spec.rank, refresh_every=spec.refresh_every,
                             adaptive_steps=0, refresh_mode=spec.refresh_mode,
                             fused=spec.fused, use_pallas=spec.use_pallas)
-    return gal.galore_adamw(gcfg, spec.lr, spec.weight_decay,
+
+
+def make_galore_tx(cfg: ArchConfig, spec: TrainSpec):
+    return gal.galore_adamw(make_galore_cfg(spec), spec.lr, spec.weight_decay,
                             target_fn=lambda p, l: True,  # trainable tree is
                             seed=spec.seed,               # already filtered
                             clip_norm=spec.clip_norm)
@@ -113,7 +133,8 @@ def make_fed_local_step(cfg: ArchConfig, spec: TrainSpec,
     """One GaLoreAdamW local step for every client in parallel.
 
     Args (client-stacked leaves marked ×C):
-      trainable ×C, frozen (shared), opt_state ×C,
+      trainable ×C, frozen (shared), opt_state ×C (``galore.stack_opt_state``
+      layout — the GaLore count/seed ride unbatched through the client vmap),
       batch {tokens ×C (c, b, L), labels ×C, embeds? ×C}
     Returns (trainable ×C, opt_state ×C, loss (C,)).
     """
@@ -131,8 +152,10 @@ def make_fed_local_step(cfg: ArchConfig, spec: TrainSpec,
     from ..models.layers import batch_axes_override
 
     def step(trainable, frozen, opt_state, batch):
+        axes = gal.client_opt_axes(opt_state)
         with batch_axes_override(()):
-            return jax.vmap(client_step, in_axes=(0, None, 0, 0),
+            return jax.vmap(client_step, in_axes=(0, None, axes, 0),
+                            out_axes=(0, axes, 0),
                             spmd_axis_name=spec.client_axes)(
                 trainable, frozen, opt_state, batch)
 
@@ -216,22 +239,40 @@ def _dense_sync_block(state_sync, v_stack, b_stack, w, rank, side):
 
 def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
                         state_sync: Optional[str] = None,
-                        factored_sync: bool = True) -> Callable:
+                        factored_sync: bool = True,
+                        factored_clients: bool = True,
+                        client_chunk: Optional[int] = None) -> Callable:
     """A full federated round (Algorithm 1) as one SPMD program:
 
-      broadcast (implicit: clients start from identical trainables) →
-      T local GaLoreAdamW steps (lax.scan) →
-      FedAvg aggregation = mean over the client axis (XLA: all-reduce over
-      the (pod, data) mesh axes) →
+      broadcast (implicit: clients start from the shared global base) →
+      T local GaLoreAdamW steps (lax.scan), streamed over cohort chunks →
+      𝒜: factored ``base_scale·W + Σ wᵢ lift(Rᵢ)`` (or the dense weighted
+      mean over the client axis under ``factored_clients=False``) →
       𝒮 (when ``state_sync`` is a protocol name): factored sync of the
       projected second moments, install + seed bump — all inside the mesh;
       the returned states are ready for the next round.
 
+    ``factored_clients`` selects the rank-r factored client memory model
+    (module docstring); it requires in-step refreshes to land on local step 0
+    (``refresh_every % local_steps == 0``) and every trainable leaf to be a
+    target block, falling back to the dense client round otherwise.
+    ``client_chunk=B`` (must divide ``n_clients``, and B must still cover the
+    client mesh axes) runs the local phase in C/B sequential chunks.
     ``state_sync=None`` preserves the legacy 𝒯→𝒜 program: raw end-of-round
     states are returned and the caller runs 𝒮 on the host (the eager
     reference path, and the dry-run default).
     """
     tx = make_galore_tx(cfg, spec)
+    gcfg = make_galore_cfg(spec)
+    # Factored deltas are exact only while the basis is fixed whenever any
+    # R_i ≠ 0, i.e. refreshes only at local step 0 (count ≡ 0 mod τ there).
+    factored_ok = (factored_clients
+                   and spec.refresh_every % spec.local_steps == 0)
+    chunk = client_chunk or n_clients
+    if n_clients % chunk:
+        raise ValueError(f"client_chunk={chunk} must divide n_clients="
+                         f"{n_clients}")
+    n_chunks = n_clients // chunk
 
     def client_round(trainable, frozen, opt_state, batches):
         def one(carry, batch):
@@ -245,22 +286,119 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
             one, (trainable, opt_state), batches)
         return trainable, opt_state, losses
 
-    def round_step(global_trainable, frozen, opt_states, batches, weights):
-        # broadcast: stack the global trainable along the client axis
+    def client_round_factored(deltas, frozen, opt_state, batches,
+                              global_trainable):
+        def one(carry, batch):
+            dl, scale, st = carry
+            tr = gal.lift_client_trainable(global_trainable, dl,
+                                           gal.galore_state_of(st), scale)
+            def loss_of(t):
+                return model_lib.loss_fn(merge_dense(frozen, t), cfg, batch)
+            loss, grads = jax.value_and_grad(loss_of)(tr)
+            dl, scale, st = gal.factored_adamw_step(
+                gcfg, grads, st, dl, scale, lr=spec.lr,
+                weight_decay=spec.weight_decay, clip_norm=spec.clip_norm)
+            return (dl, scale, st), loss
+        (deltas, scale, opt_state), losses = jax.lax.scan(
+            one, (deltas, jnp.ones([], jnp.float32), opt_state), batches)
+        return deltas, opt_state, losses, scale
+
+    from ..models.layers import batch_axes_override
+
+    def _stream(local_fn, opt_states, batches):
+        """Run the B-client local phase over the cohort: directly for a
+        single chunk, as a ``lax.scan`` over C/B (opt_chunk, batch_chunk)
+        slices otherwise, reassembling the full (C, …) stacks."""
+        if n_chunks == 1:
+            return local_fn(opt_states, batches)
+        opt_c = gal.chunk_opt_state(opt_states, n_chunks, chunk)
+        cb = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_chunks, chunk) + x.shape[1:]), batches)
+        _, out = jax.lax.scan(
+            lambda carry, xs: (carry, local_fn(*xs)), None, (opt_c, cb))
+        unchunk = lambda x: x.reshape((n_clients,) + x.shape[2:])
+        merged = (jax.tree_util.tree_map(unchunk, out[0]),
+                  gal.unchunk_opt_state(out[1], n_clients), unchunk(out[2]))
+        if len(out) == 4:                         # factored: (C,) base scales
+            merged += (out[3].reshape((n_clients,)),)
+        return merged
+
+    def _local_phase_factored(global_trainable, frozen, opt_states, batches,
+                              axes):
+        """Chunk-streamed factored local phase: (C,…) states/batches →
+        (C,…) factored deltas + end-of-round states + losses + per-client
+        base scales."""
+        g_blocks = gal.galore_state_of(opt_states).blocks
+        deltas0 = jax.tree_util.tree_map(
+            lambda st: jnp.zeros((chunk,) + st.m.shape[1:], jnp.float32),
+            g_blocks,
+            is_leaf=lambda x: isinstance(x, (gal.GaloreBlockState,
+                                             gal.DenseMoments)))
+
+        def local_fn(opt_chunk, batch_chunk):
+            with batch_axes_override(()):
+                return jax.vmap(
+                    client_round_factored, in_axes=(0, None, axes, 0, None),
+                    out_axes=(0, axes, 0, 0),
+                    spmd_axis_name=spec.client_axes)(
+                    deltas0, frozen, opt_chunk, batch_chunk,
+                    global_trainable)
+
+        return _stream(local_fn, opt_states, batches)
+
+    def _local_phase_dense(global_trainable, frozen, opt_states, batches,
+                           axes):
+        """Chunk-streamed dense local phase (the parity-oracle client model:
+        per-client weight stacks)."""
         stacked = jax.tree_util.tree_map(
-            lambda x: jnp.broadcast_to(x[None], (n_clients,) + x.shape),
+            lambda x: jnp.broadcast_to(x[None], (chunk,) + x.shape),
             global_trainable)
-        from ..models.layers import batch_axes_override
-        with batch_axes_override(()):
-            out_tr, out_st, losses = jax.vmap(
-                client_round, in_axes=(0, None, 0, 0),
-                spmd_axis_name=spec.client_axes)(stacked, frozen,
-                                                 opt_states, batches)
+
+        def local_fn(opt_chunk, batch_chunk):
+            with batch_axes_override(()):
+                return jax.vmap(
+                    client_round, in_axes=(0, None, axes, 0),
+                    out_axes=(0, axes, 0),
+                    spmd_axis_name=spec.client_axes)(
+                    stacked, frozen, opt_chunk, batch_chunk)
+
+        return _stream(local_fn, opt_states, batches)
+
+    def round_step(global_trainable, frozen, opt_states, batches, weights):
         w = weights / jnp.sum(weights)
-        # 𝒜: weighted average over the client axis -> all-reduce on the mesh
-        new_global = jax.tree_util.tree_map(
-            lambda x: jnp.tensordot(w, x.astype(jnp.float32), axes=(0, 0)
-                                    ).astype(x.dtype), out_tr)
+        axes = gal.client_opt_axes(opt_states)
+        use_factored = (factored_ok and gal.all_blocks_projected(
+            gal.galore_state_of(opt_states)))
+        if use_factored:
+            out_d, out_st, losses, base_scales = _local_phase_factored(
+                global_trainable, frozen, opt_states, batches, axes)
+            # 𝒜 factored: reduce in projected coordinates (shared seeded
+            # basis) or contract per-client lifts ('svd' diverges bases).
+            bases = gal.extract_bases(gal.galore_state_of(out_st))
+            hetero = spec.refresh_mode == "svd"
+            sbar = jnp.einsum("c,c->", w, base_scales.astype(jnp.float32))
+
+            def one(x, d_stack, b_stack):
+                side = (proj.RIGHT if d_stack.shape[-1] == b_stack.shape[-1]
+                        else proj.LEFT)
+                if hetero:
+                    lifted = agg_lib.factored_lift_average_hetero(
+                        d_stack, b_stack, side, w)
+                else:
+                    lifted = agg_lib.factored_lift_average(
+                        d_stack, b_stack[0], side, w)
+                return (sbar * x.astype(jnp.float32)
+                        + lifted).astype(x.dtype)
+
+            new_global = jax.tree_util.tree_map(one, global_trainable,
+                                                out_d, bases)
+        else:
+            out_tr, out_st, losses = _local_phase_dense(
+                global_trainable, frozen, opt_states, batches, axes)
+            # 𝒜: weighted average over the client axis -> all-reduce on mesh
+            new_global = jax.tree_util.tree_map(
+                lambda x: jnp.tensordot(w, x.astype(jnp.float32), axes=(0, 0)
+                                        ).astype(x.dtype), out_tr)
         if state_sync is not None:
             # 𝒮 in-mesh: the round program returns next-round-ready states;
             # the pre-sync ṽ is consumed internally, never materialized as

@@ -1,11 +1,13 @@
 """Parity: the whole-round fused (one-dispatch, donated-buffer) federated
-round and the scan-over-rounds driver vs the eager stage-by-stage reference
-round, plus the donation contract."""
+round — rank-r factored client deltas by default — and the scan-over-rounds
+driver vs the dense-buffer oracles (the eager stage-by-stage reference and
+the dense-stack fused round), plus chunk-streaming bit-identity and the
+donation contract."""
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core.fed import FedConfig, FedEngine
+from repro.core.fed import METHODS, FedConfig, FedEngine
 
 KEY = jax.random.PRNGKey(5)
 
@@ -42,11 +44,13 @@ def _trees_close(a, b, atol):
             jnp.max(jnp.abs(la - lb)))
 
 
-@pytest.mark.parametrize("method", ["fedgalore", "fedgalore_minus", "fedit",
-                                    "flora", "fr_lora"])
+@pytest.mark.parametrize("method", sorted(METHODS))
 def test_fused_round_matches_eager_reference(method):
-    """3 rounds of the fused one-dispatch round vs the eager reference
-    (separately dispatched InitState / 𝒯 / 𝒜 / 𝒮, dense round-0 𝒮 oracle).
+    """3 rounds of the default fused round (factored client deltas for the
+    GaLore methods) vs the eager dense-buffer reference (separately
+    dispatched InitState / 𝒯 / 𝒜 / 𝒮, dense round-0 𝒮 oracle), for every
+    fed method, with weight_decay > 0 (the scaled-base decay path) and the
+    adaptive round-0 heterogeneous-basis case (round 0 is in the window).
     flora / fr_lora additionally exercise the frozen-mutating (lift) round
     variant, whose fused program threads the frozen base through its
     outputs."""
@@ -55,6 +59,7 @@ def test_fused_round_matches_eager_reference(method):
     for fused in (True, False):
         eng = FedEngine(FedConfig(method=method, rank=4, lr=3e-2,
                                   local_steps=5, clip_norm=10.0,
+                                  weight_decay=0.01,
                                   fused_round=fused, factored_sync=fused),
                         loss, params)
         for r in range(3):
@@ -69,6 +74,84 @@ def test_fused_round_matches_eager_reference(method):
                      atol=1e-5)
     else:
         assert engines[True].synced_v is None
+
+
+@pytest.mark.parametrize("method", ["fedgalore", "fedgalore_minus",
+                                    "fedgalore_avg_svd"])
+def test_factored_clients_match_dense_fused_round(method):
+    """The rank-r factored client memory model vs the dense-stack fused round
+    (factored_clients=False — the in-fused-path oracle): 3 rounds covering
+    the adaptive round-0 per-client-basis aggregation and weight_decay > 0
+    (decay carried by the scalar base_scale instead of the dense buffer)."""
+    params, loss = _problem()
+    engines = {}
+    for factored in (True, False):
+        eng = FedEngine(FedConfig(method=method, rank=4, lr=3e-2,
+                                  local_steps=5, clip_norm=10.0,
+                                  weight_decay=0.01,
+                                  factored_clients=factored),
+                        loss, params)
+        assert eng._factored is factored
+        for r in range(3):
+            eng.run_round(_round_batches(r))
+        engines[factored] = eng
+    _trees_close(engines[True].global_trainable,
+                 engines[False].global_trainable, atol=1e-5)
+    if engines[False].synced_v is not None:
+        _trees_close(engines[True].synced_v, engines[False].synced_v,
+                     atol=1e-5)
+
+
+@pytest.mark.parametrize("method,chunk", [("fedgalore", 2),
+                                          ("fedgalore", 1),
+                                          ("fedavg_full", 2),
+                                          ("fedit", 2)])
+def test_chunked_round_bit_identical(method, chunk):
+    """Cohort chunk streaming (client_chunk=B < C) must be BIT-identical to
+    the single-chunk round (B=C): per-client work is independent and 𝒜/𝒮 run
+    once on the full reassembled stacks, so the chunk size may change peak
+    memory but never a single bit of the result. Covers the factored
+    (fedgalore), dense (fedavg_full), and LoRA (fedit) client models."""
+    params, loss = _problem()
+    engines = {}
+    for c in (None, chunk):
+        eng = FedEngine(FedConfig(method=method, rank=4, lr=3e-2,
+                                  local_steps=5, clip_norm=10.0,
+                                  weight_decay=0.01, client_chunk=c),
+                        loss, params)
+        for r in range(2):
+            eng.run_round(_round_batches(r))
+        engines[c] = eng
+    for la, lb in zip(jax.tree_util.tree_leaves(engines[None].global_trainable),
+                      jax.tree_util.tree_leaves(engines[chunk].global_trainable)):
+        assert jnp.array_equal(la, lb), float(jnp.max(jnp.abs(la - lb)))
+    if engines[None].synced_v is not None:
+        for la, lb in zip(jax.tree_util.tree_leaves(engines[None].synced_v),
+                          jax.tree_util.tree_leaves(engines[chunk].synced_v)):
+            assert jnp.array_equal(la, lb)
+
+
+def test_client_chunk_must_divide_cohort():
+    params, loss = _problem()
+    eng = FedEngine(FedConfig(method="fedgalore", rank=4, local_steps=5,
+                              client_chunk=3), loss, params)
+    with pytest.raises(ValueError, match="must divide"):
+        eng.run_round(_round_batches(0))
+
+
+def test_factored_buffers_smaller_than_dense():
+    """The persistent client buffers of the factored round are the rank-r
+    accumulators — strictly smaller than the dense (C, m, n) weight stacks
+    they replace (the C≈512 scaling lever)."""
+    params, loss = _problem()
+    sizes = {}
+    for factored in (True, False):
+        eng = FedEngine(FedConfig(method="fedgalore", rank=4, lr=3e-2,
+                                  local_steps=5,
+                                  factored_clients=factored), loss, params)
+        eng.run_round(_round_batches(0))
+        sizes[factored] = eng.client_buffer_bytes()
+    assert 0 < sizes[True] < sizes[False]
 
 
 @pytest.mark.parametrize("method", ["fedgalore", "fr_lora"])
@@ -122,19 +205,14 @@ def test_fused_round_single_dispatch_program():
     assert eng._round_jitted()._cache_size() == traced
 
 
-def test_sharded_runtime_fused_matches_eager():
-    """ShardedFederation: the in-mesh 𝒮 (fused round) must reproduce the
-    legacy jit-𝒯𝒜 + host-𝒮 round, and the scan driver must match per-round
-    dispatch."""
+def _runtime_setup(c_clients=3):
     from repro.configs import get_config, smoke_variant
-    from repro.fedsim import ShardedFederation
     from repro.launch.mesh import make_host_mesh
     from repro.launch.steps import TrainSpec
 
     cfg = smoke_variant(get_config("qwen1.5-0.5b"))
     mesh = make_host_mesh(1)
     spec = TrainSpec(rank=4, lr=1e-3, local_steps=2, refresh_mode="random")
-    c_clients = 3
 
     def batches(seed, k_rounds=None):
         kk = jax.random.PRNGKey(seed)
@@ -143,8 +221,21 @@ def test_sharded_runtime_fused_matches_eager():
         toks = jax.random.randint(kk, lead, 0, cfg.vocab_size)
         return {"tokens": toks, "labels": toks}
 
+    return cfg, mesh, spec, batches
+
+
+def test_sharded_runtime_fused_matches_eager():
+    """ShardedFederation: the in-mesh 𝒮 (fused round, dense client stacks so
+    the comparison is bit-level) must reproduce the legacy jit-𝒯𝒜 + host-𝒮
+    round, and the scan driver must match per-round dispatch."""
+    from repro.fedsim import ShardedFederation
+
+    c_clients = 3
+    cfg, mesh, spec, batches = _runtime_setup(c_clients)
+
     feds = {f: ShardedFederation(cfg, spec, mesh, c_clients,
-                                 state_sync="ajive", fused_round=f)
+                                 state_sync="ajive", fused_round=f,
+                                 factored_clients=False)
             for f in (True, False)}
     for r in range(2):
         b = batches(r)
@@ -165,10 +256,60 @@ def test_sharded_runtime_fused_matches_eager():
     _trees_close(fed_s.global_trainable, fed_p.global_trainable, atol=1e-6)
 
 
+def test_sharded_runtime_factored_matches_dense_clients():
+    """The runtime's factored client memory model (the default) vs the dense
+    per-client weight stacks (factored_clients=False): ≤1e-5 on the global
+    trainable and the synced optimizer states, with the production
+    weight_decay > 0 riding the scaled base."""
+    from repro.fedsim import ShardedFederation
+
+    c_clients = 3
+    cfg, mesh, spec, batches = _runtime_setup(c_clients)
+    assert spec.weight_decay > 0
+
+    feds = {f: ShardedFederation(cfg, spec, mesh, c_clients,
+                                 state_sync="ajive", factored_clients=f)
+            for f in (True, False)}
+    for r in range(2):
+        b = batches(r)
+        mf = feds[True].run_round(b)
+        md = feds[False].run_round(b)
+        assert jnp.allclose(mf["losses"], md["losses"], atol=1e-5)
+    _trees_close(feds[True].global_trainable, feds[False].global_trainable,
+                 atol=1e-5)
+    _trees_close(feds[True].opt_states, feds[False].opt_states, atol=1e-5)
+
+
+def test_sharded_runtime_chunked_bit_identical():
+    """client_chunk=B < C must be bit-identical to the single-chunk round in
+    the sharded runtime too (same per-client programs, 𝒜/𝒮 on the full
+    reassembled stacks)."""
+    from repro.fedsim import ShardedFederation
+
+    c_clients = 4
+    cfg, mesh, spec, batches = _runtime_setup(c_clients)
+
+    feds = {c: ShardedFederation(cfg, spec, mesh, c_clients,
+                                 state_sync="ajive", client_chunk=c)
+            for c in (None, 2)}
+    for r in range(2):
+        b = batches(r)
+        feds[None].run_round(b)
+        feds[2].run_round(b)
+    for la, lb in zip(jax.tree_util.tree_leaves(feds[None].global_trainable),
+                      jax.tree_util.tree_leaves(feds[2].global_trainable)):
+        assert jnp.array_equal(la, lb)
+    for la, lb in zip(jax.tree_util.tree_leaves(feds[None].opt_states),
+                      jax.tree_util.tree_leaves(feds[2].opt_states)):
+        assert jnp.array_equal(la, lb)
+
+
 def test_sharded_runtime_svd_mode_hetero_sync_matches_dense_oracle():
     """refresh_mode='svd' diverges the client bases, so the in-mesh 𝒮 takes
-    the heterogeneous-basis factored path; it must agree with the dense
-    per-client-lift oracle (factored_sync=False) to fp32 precision."""
+    the heterogeneous-basis factored path and the factored clients' 𝒜
+    contracts the per-client lifts; both must agree with the dense
+    per-client round + dense-lift oracle (fused_round=False,
+    factored_sync=False, factored_clients=False) to fp32 precision."""
     from repro.configs import get_config, smoke_variant
     from repro.fedsim import ShardedFederation
     from repro.launch.mesh import make_host_mesh
@@ -185,8 +326,10 @@ def test_sharded_runtime_svd_mode_hetero_sync_matches_dense_oracle():
     fed_h = ShardedFederation(cfg, spec, mesh, 3, state_sync="ajive")
     fed_h.run_round(b)
     fed_d = ShardedFederation(cfg, spec, mesh, 3, state_sync="ajive",
-                              fused_round=False, factored_sync=False)
+                              fused_round=False, factored_sync=False,
+                              factored_clients=False)
     fed_d.run_round(b)
+    _trees_close(fed_h.global_trainable, fed_d.global_trainable, atol=1e-5)
     for a, d in zip(jax.tree_util.tree_leaves(fed_h.opt_states),
                     jax.tree_util.tree_leaves(fed_d.opt_states)):
         assert jnp.allclose(a.astype(jnp.float32), d.astype(jnp.float32),

@@ -117,6 +117,32 @@ class TestGaloreKernel:
         assert jnp.allclose(v_pre, v_full, atol=1e-6)
         assert jnp.allclose(w - lr * u, w_new, atol=1e-5)
 
+    @pytest.mark.parametrize("side,shape", [("right", (96, 256)),
+                                            ("left", (256, 96))])
+    def test_precond_projected_output(self, side, shape):
+        """project_back=False returns ũ in the moment shape with
+        lift(ũ) == the ambient u of the default path, same moments — the
+        factored-delta client contract."""
+        m, n = shape
+        r = 8
+        dim = n if side == "right" else m
+        mv_shape = (m, r) if side == "right" else (r, n)
+        ks = jax.random.split(KEY, 4)
+        g = jax.random.normal(ks[0], (m, n))
+        basis = jnp.linalg.qr(jax.random.normal(ks[1], (dim, r)))[0]
+        mm = 0.1 * jax.random.normal(ks[2], mv_shape, jnp.float32)
+        vv = 0.01 * jnp.abs(jax.random.normal(ks[3], mv_shape, jnp.float32))
+        u, m_a, v_a = ops.galore_precond_step(g, basis, mm, vv, 5.0,
+                                              block_rows=64)
+        ut, m_p, v_p = ops.galore_precond_step(g, basis, mm, vv, 5.0,
+                                               block_rows=64,
+                                               project_back=False)
+        assert ut.shape == mv_shape
+        assert jnp.allclose(m_p, m_a, atol=1e-6)
+        assert jnp.allclose(v_p, v_a, atol=1e-6)
+        lifted = ut @ basis.T if side == "right" else basis @ ut
+        assert jnp.allclose(lifted, u, atol=1e-5)
+
 
 class TestFlashAttention:
     @pytest.mark.parametrize("lq,lk,h,hkv,d", [
