@@ -29,9 +29,15 @@ axis. Sweeps C ∈ {8, 64, 512} through the chunk-streamed fused round on a
 wide-block problem, reporting wall-clock alongside **peak client-buffer
 bytes** (the persistent per-client round state the factored representation
 shrinks from O(C·m·n) to O(C·r(m+n))), against the retired dense-stack model
-at C=8. Acceptance: the C=512 factored round completes with client buffers
-within 4× the old C=8 dense configuration, and factored-vs-dense round
-parity ≤ 1e-5 at C=8.
+at C=8 — and, at each C, the **lift-free** delta-context round (the default)
+against the transient-lift oracle (``lift_free=False``: materialize
+``base_scale·W + lift(R_i)`` per leaf per step, dense AD, re-project). The
+C=512 lift-free round is the headline number; a per-stage breakdown
+(InitState+local 𝒯 vs 𝒜 vs 𝒮, separately jitted) localizes where round time
+goes. Acceptance: the C=512 round stays within the recorded budget
+(regression guard, not just a recording), lift-free is no slower than
+transient-lift at the compute-bound cohort shape, buffers stay within 4× the
+old C=8 dense configuration, and factored-vs-dense parity ≤ 1e-4 at C=8.
 """
 from __future__ import annotations
 
@@ -152,6 +158,10 @@ COHORT_CLIENTS = (8, 64, 512)
 COHORT_WIDTH = 512      # wide blocks: the regime where O(m·n) vs O(r(m+n))
 COHORT_RANK = 4         # per-client state is the whole story
 COHORT_CHUNK = 32       # B: dense transient working set bounded by 32 clients
+# Regression guard for the headline C=512 round (seconds on this CPU): the
+# PR 4 transient-lift baseline measured 6.85 s — the lift-free round must
+# never regress past it. Update deliberately when the workload changes.
+COHORT_CMAX_ROUND_S_BUDGET = 6.85
 
 
 def _tree_maxerr(a, b):
@@ -161,19 +171,66 @@ def _tree_maxerr(a, b):
                                jax.tree_util.tree_leaves(b)))
 
 
+def _stage_breakdown(eng, c, batches, w=None, reps=2):
+    """Per-stage wall-clock of the factored round: separately jitted
+    InitState+local 𝒯, aggregation 𝒜, and state-sync 𝒮 (their sum exceeds
+    the fused round, which overlaps dispatch — the split localizes where
+    time goes, it does not replace the fused number)."""
+    w = jnp.full((c,), 1.0 / c) if w is None else w
+    ridx = jnp.asarray(1, jnp.int32)      # steady state: past adaptive r0
+
+    @jax.jit
+    def local_stage(global_tr, frozen, bat):
+        st0 = eng._init_state0(ridx, None, global_tr)
+        opt0 = eng._stack_opt_state(st0, c)
+        deltas0 = eng._stack_deltas0(st0, c)
+        fn = (eng._local_train_liftfree_one if eng._lift_free
+              else eng._local_train_factored_one)
+        return jax.vmap(fn, in_axes=(0, eng._opt_axes, 0, None, None),
+                        out_axes=(0, eng._opt_axes, 0, 0))(
+            deltas0, opt0, bat, frozen, global_tr)
+
+    @jax.jit
+    def agg_stage(global_tr, out_d, out_opt, scales):
+        return eng._aggregate_factored(global_tr, out_d, out_opt, scales,
+                                       w, ridx)
+
+    @jax.jit
+    def sync_stage(out_opt):
+        return eng._sync_states_pure(out_opt, w, ridx)
+
+    def timed(fn, *args):
+        jax.block_until_ready(fn(*args))                  # compile
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    local_s = timed(local_stage, eng.global_trainable, eng.frozen, batches)
+    out_d, out_opt, _, scales = local_stage(eng.global_trainable, eng.frozen,
+                                            batches)
+    agg_s = timed(agg_stage, eng.global_trainable, out_d, out_opt, scales)
+    sync_s = timed(sync_stage, out_opt)
+    return {"local_s": local_s, "agg_s": agg_s, "sync_s": sync_s}
+
+
 def bench_cohort(clients=COHORT_CLIENTS, rounds_timed=2):
     """Cohort-size sweep of the factored chunk-streamed round (fedgalore,
-    T=1) vs the retired dense-stack client model at C=8: wall-clock + peak
-    client-buffer bytes + factored-vs-dense parity."""
+    T=1): the lift-free delta-context round (default) vs the transient-lift
+    oracle at every C, vs the retired dense-stack client model at C=8 —
+    wall-clock + peak client-buffer bytes + parity + per-stage breakdown."""
     n_blocks, width, local_steps, b = 2, COHORT_WIDTH, 1, 2
     params, loss, batches = _engine_problem(n_blocks, width)
 
-    def make(factored, chunk=None):
+    def make(factored, chunk=None, lift_free=True):
         # Cohort size comes from the batch leading dim at run_round time.
         return FedEngine(FedConfig(method="fedgalore", rank=COHORT_RANK,
                                    lr=1e-2, local_steps=local_steps,
                                    factored_clients=factored,
-                                   client_chunk=chunk), loss, params)
+                                   client_chunk=chunk, lift_free=lift_free),
+                        loss, params)
 
     def run(eng, c, n_rounds, offset=0):
         t0 = time.perf_counter()
@@ -193,36 +250,71 @@ def bench_cohort(clients=COHORT_CLIENTS, rounds_timed=2):
     emit("round_e2e/cohort_c8_dense", dense8_s * 1e6,
          f"buffer_bytes={dense8_bytes}")
 
-    # Factored-vs-dense parity at C=8 (identical batches, 2 rounds).
-    fact8 = make(factored=True)
-    dense8b = make(factored=False)
+    # Parity at C=8 (identical batches, 2 rounds): lift-free vs the
+    # transient-lift oracle, and lift-free vs the dense-stack oracle.
+    lf8, tr8, dense8b = make(True), make(True, lift_free=False), make(False)
     for r in range(2):
-        fact8.run_round(batches(r, 8, local_steps, b))
-        dense8b.run_round(batches(r, 8, local_steps, b))
-    parity = max(_tree_maxerr(fact8.global_trainable, dense8b.global_trainable),
-                 _tree_maxerr(fact8.synced_v, dense8b.synced_v))
+        for e in (lf8, tr8, dense8b):
+            e.run_round(batches(r, 8, local_steps, b))
+    parity_lf_tr = max(_tree_maxerr(lf8.global_trainable, tr8.global_trainable),
+                       _tree_maxerr(lf8.synced_v, tr8.synced_v))
+    parity = max(_tree_maxerr(lf8.global_trainable, dense8b.global_trainable),
+                 _tree_maxerr(lf8.synced_v, dense8b.synced_v))
 
+    liftfree_s, transient_s = {}, {}
     for c in clients:
-        eng = make(factored=True, chunk=min(COHORT_CHUNK, c))
-        run(eng, c, 2)
-        sec = run(eng, c, rounds_timed, offset=10)
-        nbytes = eng.client_buffer_bytes()
-        rows.append({"engine": "FedEngine", "sweep": "cohort", "clients": c,
-                     "client_model": "factored", "chunk": min(COHORT_CHUNK, c),
-                     "round_s": sec, "client_buffer_bytes": nbytes,
-                     "buffer_vs_c8_dense": nbytes / dense8_bytes})
-        emit(f"round_e2e/cohort_c{c}_factored", sec * 1e6,
-             f"buffer_bytes={nbytes} "
-             f"vs_c8_dense={nbytes / dense8_bytes:.2f}x")
-    c512 = next(r for r in rows if r["clients"] == max(clients)
-                and r["client_model"] == "factored")
+        chunk = min(COHORT_CHUNK, c)
+        for lift_free in (True, False):
+            eng = make(factored=True, chunk=chunk, lift_free=lift_free)
+            run(eng, c, 2)
+            sec = run(eng, c, rounds_timed, offset=10)
+            (liftfree_s if lift_free else transient_s)[c] = sec
+            nbytes = eng.client_buffer_bytes()
+            model = "liftfree" if lift_free else "transient_lift"
+            rows.append({"engine": "FedEngine", "sweep": "cohort",
+                         "clients": c, "client_model": model, "chunk": chunk,
+                         "round_s": sec, "client_buffer_bytes": nbytes,
+                         "buffer_vs_c8_dense": nbytes / dense8_bytes})
+            emit(f"round_e2e/cohort_c{c}_{model}", sec * 1e6,
+                 f"buffer_bytes={nbytes} "
+                 f"vs_c8_dense={nbytes / dense8_bytes:.2f}x")
+
+    # Stage breakdown at an unchunked mid-size cohort (the split isolates
+    # per-stage compute; unchunked keeps one vmapped local program, and C=64
+    # bounds the transient path's per-client dense working set).
+    cmax = max(clients)
+    bc = min(64, cmax)
+    for lift_free in (True, False):
+        eng = make(factored=True, lift_free=lift_free)
+        eng.run_round(batches(0, bc, local_steps, b))     # warm buffers
+        stages = _stage_breakdown(eng, bc,
+                                  batches(1, bc, local_steps, b))
+        model = "liftfree" if lift_free else "transient_lift"
+        rows.append({"engine": "FedEngine", "sweep": "stage_breakdown",
+                     "clients": bc, "client_model": model, **stages})
+        emit(f"round_e2e/stages_c{bc}_{model}",
+             stages["local_s"] * 1e6,
+             f"agg={stages['agg_s'] * 1e6:.0f}us "
+             f"sync={stages['sync_s'] * 1e6:.0f}us")
+
+    cmax_bytes = next(r["client_buffer_bytes"] for r in rows
+                      if r.get("clients") == cmax
+                      and r.get("client_model") == "liftfree")
     return rows, {
-        "cohort_cmax": max(clients),
-        "cohort_cmax_round_s": c512["round_s"],
-        "cohort_cmax_buffer_bytes": c512["client_buffer_bytes"],
+        "cohort_cmax": cmax,
+        "cohort_cmax_round_s": liftfree_s[cmax],
+        "cohort_cmax_round_s_transient": transient_s[cmax],
+        "cohort_cmax_round_s_budget": COHORT_CMAX_ROUND_S_BUDGET,
+        "cohort_cmax_within_budget":
+            liftfree_s[cmax] <= COHORT_CMAX_ROUND_S_BUDGET,
+        "liftfree_speedup_cmax": transient_s[cmax] / liftfree_s[cmax],
+        "liftfree_speedup_by_clients": {
+            str(c): transient_s[c] / liftfree_s[c] for c in clients},
+        "cohort_cmax_buffer_bytes": cmax_bytes,
         "c8_dense_buffer_bytes": dense8_bytes,
-        "cohort_buffer_ratio_cmax_vs_c8_dense": c512["buffer_vs_c8_dense"],
+        "cohort_buffer_ratio_cmax_vs_c8_dense": cmax_bytes / dense8_bytes,
         "factored_parity_c8": parity,
+        "liftfree_parity_c8": parity_lf_tr,
     }
 
 

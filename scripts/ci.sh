@@ -19,6 +19,17 @@ if [[ "${1:-}" == "--bench-smoke" ]]; then
 import json
 acc = json.load(open("BENCH_round_e2e.json"))["acceptance"]
 print("round_e2e acceptance:", json.dumps(acc, indent=1))
+# Perf gates (not just recordings): the headline C=512 factored round must
+# stay within the recorded budget, and the lift-free delta-context round
+# must be no slower than the transient-lift oracle at the compute-bound
+# cohort shape.
+assert acc["cohort_cmax_within_budget"], (
+    f"C={acc['cohort_cmax']} factored round regressed: "
+    f"{acc['cohort_cmax_round_s']:.2f}s > "
+    f"budget {acc['cohort_cmax_round_s_budget']:.2f}s")
+assert acc["liftfree_speedup_cmax"] >= 1.0, (
+    f"lift-free round slower than transient-lift at C={acc['cohort_cmax']}: "
+    f"{acc['liftfree_speedup_cmax']:.2f}x")
 EOF
     exit 0
 fi

@@ -45,8 +45,21 @@ transfer Grams — no dense ``(C, m, n)`` lift anywhere).
 ``lax.scan`` dispatch for benchmark sweeps. ``FedConfig.factored_clients=
 False`` keeps the fused round on dense per-client weight stacks;
 ``fused_round=False`` (or ``factored_sync=False``) restores the eager
-stage-by-stage reference round — the dense-buffer parity oracle, and the only
-path that executes the dense per-client lift."""
+stage-by-stage reference round — the dense-buffer parity oracle.
+
+Memory model of the default factored round: **lift-free end to end**
+(``FedConfig.lift_free``). The local step never reads a dense per-leaf
+weight: target leaves enter the loss as ``models.layers.LowRankDelta`` nodes
+whose delta-aware matmul computes ``base_scale·(x@W) + split-matmul(R_i)``
+(O(t·r·(m+n)) on top of the base GEMM), and the custom VJP returns the
+cotangent for ``R_i`` already in rank-r coordinates — so the factored round
+executes **zero** O(m·n·r) lift GEMMs and **zero** dense m×n gradient
+cotangents for GaLore target leaves. Global-norm clipping stays exact via
+the VJP's dense-norm probes. The transient-lift read (``lift_free=False`` —
+materialize ``base_scale·W + lift(R_i)`` per leaf per step, dense AD, then
+re-project) survives as the parity oracle, and is still what the adaptive
+round 0 runs (a ``lax.cond``): its data-driven RSVD refresh needs the dense
+per-client gradient that the lift-free path never builds."""
 from __future__ import annotations
 
 import dataclasses
@@ -129,18 +142,27 @@ class FedConfig:
     # chunk), bounding the dense transient working set by B clients.
     factored_clients: bool = True
     client_chunk: Optional[int] = None
+    # Lift-free factored local steps (module docstring): the delta-aware
+    # forward + projected-cotangent backward replace the per-leaf transient
+    # lift and the dense gradient. Effective when the factored client model
+    # is active (all trainable leaves are target blocks); the adaptive
+    # round 0 stays on the transient-lift read via a lax.cond (its RSVD
+    # refresh needs dense gradients). False keeps PR 4's transient-lift
+    # read everywhere — the lift-free parity oracle.
+    lift_free: bool = True
 
 
 # ------------------------------------------------------------ trainables ----
 
 def split_trainable(params: PyTree, target_fn) -> tuple:
-    """dense/galore trainable: the target leaves themselves; the rest frozen."""
+    """dense/galore trainable: the target matrix leaves themselves (2-D, or
+    3-D stacked scan blocks — one projector per layer); the rest frozen."""
     leaves = jax.tree_util.tree_flatten_with_path(params)[0]
     treedef = jax.tree_util.tree_structure(params)
     train, frozen = [], []
     for path, p in leaves:
         pstr = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in path)
-        if p.ndim == 2 and target_fn(pstr, p):
+        if p.ndim in (2, 3) and target_fn(pstr, p):
             train.append(p)
             frozen.append(None)
         else:
@@ -216,6 +238,10 @@ class FedEngine:
                 lambda: self.tx.init(self.global_trainable))
             self._factored = gal.all_blocks_projected(
                 gal.galore_state_of(st_shape))
+        # Lift-free delta-context local steps: default on whenever the
+        # factored client model is (all blocks projected); lift_free=False
+        # keeps the transient-lift read as the parity oracle.
+        self._lift_free = bool(cfg.lift_free) and self._factored
         # Whole-round fused program state: the persistent client buffers —
         # factored (C, ·, r) accumulators or dense (C, m, n) stacks — are
         # donated back into every round call (their memory is reused for
@@ -482,6 +508,44 @@ class FedEngine:
             step, (deltas, jnp.ones([], jnp.float32), opt_state), batches)
         return deltas, opt_state, losses, scale
 
+    def _local_train_liftfree_one(self, deltas, opt_state, batches, frozen,
+                                  global_trainable):
+        """T lift-free local steps on one client (lax.scan): target leaves
+        enter the loss as LowRankDelta nodes — the forward is the split-
+        matmul delta read, the backward returns the R_i cotangent already in
+        rank-r coordinates plus exact dense-norm probes for clipping, and
+        the step consumes them with the projection GEMM skipped
+        (galore.factored_adamw_step on a LiftFreeGrads bundle). The in-step
+        refresh is hoisted before the forward (galore.maybe_refresh_instep)
+        so cotangents arrive on the refreshed basis — seeded-random only,
+        which is why the adaptive round 0 runs the transient oracle
+        instead."""
+        c = self.cfg
+
+        def step(carry, batch):
+            dl, scale, st = carry
+            g0 = gal.maybe_refresh_instep(self.galore_cfg,
+                                          gal.galore_state_of(st))
+            st = gal.replace_galore_state(st, g0)
+            loss, grads = gal.liftfree_value_and_grad(
+                lambda tr: self._trainable_loss(tr, batch, frozen),
+                global_trainable, dl, g0, scale)
+            dl, scale, st = gal.factored_adamw_step(
+                self.galore_cfg, grads, st, dl, scale, lr=c.lr,
+                weight_decay=c.weight_decay, clip_norm=c.clip_norm)
+            return (dl, scale, st), loss
+
+        (deltas, scale, opt_state), losses = jax.lax.scan(
+            step, (deltas, jnp.ones([], jnp.float32), opt_state), batches)
+        return deltas, opt_state, losses, scale
+
+    def _round0_adaptive(self) -> bool:
+        """Whether round 0's in-step refresh is data-driven (RSVD of each
+        client's own dense gradient) — the one case the lift-free read
+        cannot serve and the transient-lift oracle handles via lax.cond."""
+        return (self.galore_cfg.adaptive_steps > 0
+                and self.galore_cfg.refresh_mode != "random")
+
     def _aggregate_factored(self, global_trainable, out_deltas, out_opt,
                             base_scales, w, round_idx):
         """𝒜 for factored clients: ``(Σᵢ wᵢ sᵢ)·W + Σᵢ wᵢ lift(Rᵢ, Bᵢ)`` per
@@ -560,12 +624,29 @@ class FedEngine:
         if self._factored:
             deltas0 = self._stack_deltas0(st0, b)
 
-            def local_fn(batch_c):
-                return jax.vmap(
-                    self._local_train_factored_one,
-                    in_axes=(0, self._opt_axes, 0, None, None),
-                    out_axes=(0, self._opt_axes, 0, 0))(
+            def vmapped(fn):
+                return jax.vmap(fn, in_axes=(0, self._opt_axes, 0, None,
+                                             None),
+                                out_axes=(0, self._opt_axes, 0, 0))
+
+            def transient_fn(batch_c):
+                return vmapped(self._local_train_factored_one)(
                     deltas0, opt0, batch_c, frozen, global_trainable)
+
+            def liftfree_fn(batch_c):
+                return vmapped(self._local_train_liftfree_one)(
+                    deltas0, opt0, batch_c, frozen, global_trainable)
+
+            if not self._lift_free:
+                local_fn = transient_fn
+            elif self._round0_adaptive():
+                # Round 0's data-driven refresh needs dense gradients; every
+                # later round runs lift-free. Same output pytree both ways.
+                def local_fn(batch_c):
+                    return jax.lax.cond(round_idx == 0, transient_fn,
+                                        liftfree_fn, batch_c)
+            else:
+                local_fn = liftfree_fn
 
             out_d, out_opt, losses, scales = stream(local_fn, client_batches)
             new_global = self._aggregate_factored(

@@ -334,7 +334,8 @@ def _bucketed_update(cfg: GaloreConfig, use_pallas: bool, g_leaves,
 
 
 def galore_transform_update(cfg: GaloreConfig, grads, state: GaloreState,
-                            project_back: bool = True):
+                            project_back: bool = True,
+                            projected: bool = False):
     """One GaLore preconditioning step as a pure function (the
     ``scale_by_galore`` update body): in-step ``count % τ`` refresh, projected
     Adam moments, update direction. With the default ``project_back=True``
@@ -342,7 +343,15 @@ def galore_transform_update(cfg: GaloreConfig, grads, state: GaloreState,
     API). ``project_back=False`` returns them as the *projected* ũ (shaped
     like the moments) — the factored-delta client path, which keeps the whole
     local step in rank-r coordinates and defers the lift to the weight read.
-    Non-target (``DenseMoments``) leaves are plain Adam either way."""
+    Non-target (``DenseMoments``) leaves are plain Adam either way.
+
+    ``projected=True`` is the **lift-free** consumption mode: the incoming
+    gradients are *already* in rank-r coordinates (the projected-cotangent
+    VJP of the delta-aware forward), so the ``Pᵀg`` projection GEMM is
+    skipped and the step is pure projected-space Adam. The caller owns the
+    refresh (hoisted :func:`maybe_refresh_instep` before the forward, so the
+    cotangents arrive on the refreshed basis); every leaf must be a target
+    block (:func:`all_blocks_projected`)."""
     count = state.count + 1
     refresh_idx = state.count // cfg.refresh_every
     do_refresh = (state.count % cfg.refresh_every) == 0
@@ -352,6 +361,23 @@ def galore_transform_update(cfg: GaloreConfig, grads, state: GaloreState,
     blk_leaves = jax.tree_util.tree_leaves(
         state.blocks, is_leaf=lambda x: isinstance(x, (GaloreBlockState,
                                                        DenseMoments)))
+    if projected:
+        updates, new_blocks = [], []
+        for (path, g), st in zip(leaves, blk_leaves):
+            if not isinstance(st, GaloreBlockState):
+                raise ValueError(
+                    "projected-gradient GaLore step requires every leaf to "
+                    f"be a target block; {_path_str(path)} is dense")
+            side = _moment_side(st)
+            m, v, ut = _projected_adam(cfg, g.astype(jnp.float32), st.m,
+                                       st.v, count)
+            updates.append(proj.project_back(ut, st.basis, side)
+                           if project_back else ut)
+            new_blocks.append(GaloreBlockState(basis=st.basis, m=m, v=v))
+        return (jax.tree_util.tree_unflatten(treedef, updates),
+                GaloreState(count=count, seed=state.seed,
+                            blocks=jax.tree_util.tree_unflatten(treedef,
+                                                                new_blocks)))
     if cfg.fused:
         updates, new_blocks = _bucketed_update(
             cfg, _resolve_use_pallas(cfg), [g for _, g in leaves],
@@ -517,6 +543,27 @@ def manual_refresh(cfg: GaloreConfig, state: GaloreState, refresh_idx,
                        blocks=jax.tree_util.tree_unflatten(treedef, out))
 
 
+def maybe_refresh_instep(cfg: GaloreConfig, state: GaloreState) -> GaloreState:
+    """Hoisted in-step refresh for the lift-free local step.
+
+    Fires on the dense path's exact predicate (``count % τ == 0``,
+    ``refresh_idx = count // τ``) but *before* the step's forward instead of
+    inside the optimizer update — so the delta-aware forward reads (and the
+    projected cotangent therefore arrives on) the refreshed basis, which is
+    precisely the basis the dense path would project its basis-independent
+    dense gradient onto. Equivalent by construction wherever the factored
+    client model is valid (refreshes land only where R_i ≡ 0).
+
+    Seeded-random refreshes only (:func:`manual_refresh` with ``grads=None``)
+    — callers must not enter the lift-free path when a data-driven refresh
+    could fire (``refresh_mode='svd'`` or an in-window adaptive refresh),
+    since those need the dense gradient this path never materializes."""
+    do = (state.count % cfg.refresh_every) == 0
+    idx = state.count // cfg.refresh_every
+    return jax.lax.cond(do, lambda s: manual_refresh(cfg, s, idx),
+                        lambda s: s, state)
+
+
 # --------------------------------------------- factored-delta client state --
 #
 # Within a federated round every GaLoreAdamW local update lives in the shared
@@ -574,6 +621,58 @@ def lift_client_trainable(base: PyTree, deltas: PyTree, state: GaloreState,
     return jax.tree_util.tree_map(one, base, deltas, state.blocks)
 
 
+class LiftFreeGrads(NamedTuple):
+    """Lift-free gradient bundle: per-leaf *projected* cotangents (moment
+    shape — the delta-aware VJP emits them in rank-r coordinates) plus the
+    exact squared dense-gradient norm probes that stand in for the dense
+    leaves in global-norm clipping."""
+    proj: PyTree    # g̃ per target leaf, shaped like the projected moments
+    nsq: PyTree     # ‖dense g‖² per leaf (scalar, or (nb,) for stacked)
+
+
+def liftfree_params(base: PyTree, deltas: PyTree, nsq: PyTree,
+                    state: GaloreState, base_scale) -> PyTree:
+    """Build the delta-context trainable tree: each target leaf becomes a
+    :class:`models.layers.LowRankDelta` carrying (base W, basis, R̃, norm
+    probe, base_scale) — the loss consumes it through ``layers.dense`` /
+    ``@`` and neither the lifted weight nor a dense cotangent ever exists.
+    ``base_scale`` is broadcast per-layer for stacked (nb, m, n) leaves so
+    the node slices cleanly under the model's scan over layers."""
+    from ..models.layers import LowRankDelta
+
+    def one(w0, d, ns, st):
+        lead = w0.shape[:-2]
+        return LowRankDelta(
+            w=w0, basis=st.basis.astype(jnp.float32),
+            rt=d.astype(jnp.float32), nsq=ns,
+            scale=jnp.broadcast_to(jnp.asarray(base_scale, jnp.float32),
+                                   lead))
+    return jax.tree_util.tree_map(one, base, deltas, nsq, state.blocks)
+
+
+def liftfree_nsq0(deltas: PyTree) -> PyTree:
+    """Zero norm probes, one scalar per target leaf (per layer for stacked
+    leaves): the differentiated inputs whose cotangents come back as
+    ‖dense g‖² from the delta-aware VJP."""
+    return jax.tree_util.tree_map(
+        lambda d: jnp.zeros(d.shape[:-2], jnp.float32), deltas)
+
+
+def liftfree_value_and_grad(loss_of_params, base: PyTree, deltas: PyTree,
+                            state: GaloreState, base_scale):
+    """``(loss, LiftFreeGrads)`` for one lift-free local step: differentiate
+    the loss wrt the rank-r accumulators (cotangents arrive projected) and
+    the norm probes (cotangents arrive as exact dense-grad squared norms).
+    The base weights, bases, and scale are closed-over constants — AD never
+    touches them, so no dense m×n cotangent exists in the program."""
+    def wrapped(dl, ns):
+        return loss_of_params(liftfree_params(base, dl, ns, state,
+                                              base_scale))
+    loss, (gt, nsq) = jax.value_and_grad(wrapped, argnums=(0, 1))(
+        deltas, liftfree_nsq0(deltas))
+    return loss, LiftFreeGrads(proj=gt, nsq=nsq)
+
+
 def factored_adamw_step(cfg: GaloreConfig, grads, opt_state, deltas,
                         base_scale, *, lr, weight_decay: float = 0.0,
                         clip_norm: Optional[float] = None):
@@ -597,22 +696,36 @@ def factored_adamw_step(cfg: GaloreConfig, grads, opt_state, deltas,
     install / stacking machinery is representation-agnostic). With a schedule
     ``lr`` the step size reads the chain's ``ScaleByLrState`` count, which is
     batched per client — callers must treat ``base_scale`` as per-client
-    (vmap out axis 0); the aggregation consumes it as ``Σ wᵢ sᵢ``."""
+    (vmap out axis 0); the aggregation consumes it as ``Σ wᵢ sᵢ``.
+
+    ``grads`` may be the dense per-leaf gradients (the transient-lift read)
+    or a :class:`LiftFreeGrads` bundle (the lift-free read): projected
+    cotangents consumed with the ``Pᵀg`` projection skipped, and global-norm
+    clipping driven by the exact dense-norm probes — same arithmetic as
+    ``clip_by_global_norm`` on gradients that never materialized."""
     from ..optim.base import ClipState, ScaleByLrState, global_norm
     if isinstance(opt_state, GaloreState):
         states = [opt_state]
     else:
         states = list(opt_state)
     new_states = list(states)
+    lift_free = isinstance(grads, LiftFreeGrads)
+    if lift_free:
+        grads, nsq = grads.proj, grads.nsq
     if clip_norm is not None:
         # Same arithmetic as optim.base.clip_by_global_norm on the dense
         # gradients (the factored path changes the state, not the math).
-        gnorm = global_norm(grads)
+        if lift_free:
+            gnorm = jnp.sqrt(sum(jnp.sum(x)
+                                 for x in jax.tree_util.tree_leaves(nsq)))
+        else:
+            gnorm = global_norm(grads)
         cscale = jnp.minimum(1.0, clip_norm / (gnorm + 1e-12))
         grads = jax.tree_util.tree_map(lambda g: g * cscale, grads)
     gi = next(i for i, s in enumerate(states) if isinstance(s, GaloreState))
     ut, new_states[gi] = galore_transform_update(cfg, grads, states[gi],
-                                                 project_back=False)
+                                                 project_back=False,
+                                                 projected=lift_free)
     step_lr = None
     for i, s in enumerate(states):
         if isinstance(s, ScaleByLrState):

@@ -13,11 +13,17 @@ round's outputs reuse the previous round's memory.
 
 Client memory model: with the default ``factored_clients=True`` a client's
 round state is the rank-r factored accumulator ``R_i`` around the shared
-global base — the local step reads ``base_scale·W + lift(R_i)`` transiently
-(decoupled weight decay rides the scalar ``base_scale``) and 𝒜 collapses to
-``base_scale·W + Σ wᵢ lift(Rᵢ)``, so no dense ``(C, m, n)`` per-client weight
-stack exists anywhere in the round program; per-client persistent state is
-O(r(m+n)) per block (the projected moments + basis). ``client_chunk=B``
+global base, and with the default ``lift_free=True`` the local step is
+**lift-free**: target leaves flow into the model as delta-context nodes
+(``models.layers.LowRankDelta``) whose split-matmul apply and projected-
+cotangent VJP replace both the per-leaf ``base_scale·W + lift(R_i)``
+transient and the dense m×n gradient (``lift_free=False`` keeps the
+transient-lift read as the parity oracle; ``refresh_mode='svd'`` forces it —
+data-driven refreshes need dense gradients). Decoupled weight decay rides
+the scalar ``base_scale`` and 𝒜 collapses to ``base_scale·W + Σ wᵢ
+lift(Rᵢ)``, so no dense ``(C, m, n)`` per-client weight stack exists
+anywhere in the round program; per-client persistent state is O(r(m+n)) per
+block (the projected moments + basis). ``client_chunk=B``
 additionally streams the cohort through the round in C/B sequential chunks,
 bounding the dense forward/backward working set by B clients and decoupling
 cohort size from peak memory (C≈512 rounds on a single host). The stacked
@@ -63,7 +69,8 @@ class ShardedFederation:
                  n_clients: int, state_sync: str = "ajive", seed: int = 0,
                  factored_sync: bool = True, fused_round: bool = True,
                  factored_clients: bool = True,
-                 client_chunk: Optional[int] = None):
+                 client_chunk: Optional[int] = None,
+                 lift_free: Optional[bool] = None):
         self.cfg = cfg
         self.spec = spec
         self.mesh = mesh
@@ -103,7 +110,8 @@ class ShardedFederation:
             cfg, spec, n_clients,
             state_sync=(state_sync if fused_round else None),
             factored_sync=factored_sync,
-            factored_clients=factored_clients, client_chunk=client_chunk)
+            factored_clients=factored_clients, client_chunk=client_chunk,
+            lift_free=lift_free)
         self._round = jax.jit(self._round_core,
                               donate_argnums=(0, 2) if fused_round else ())
         self._rounds_scan = None

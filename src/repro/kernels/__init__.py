@@ -4,13 +4,15 @@
   update → precondition → project-back in one VMEM-resident pass.
 * ``flash_attention`` — blockwise GQA attention (train/prefill hot-spot).
 * ``rwkv6_scan`` — chunked WKV recurrence with VMEM-persistent state.
+* ``lowrank_linear`` — lift-free factored weight read: one fused pass for
+  ``scale·(x@W) + split-matmul rank-r delta`` (the federated client forward).
 
 ``ops`` holds the jit'd public wrappers (interpret=True on CPU); ``ref``
 holds the pure-jnp oracles the tests assert against.
 """
 from . import ops, ref
 from .ops import (flash_attention, galore_adamw_step, galore_precond_step,
-                  rwkv6_scan)
+                  lowrank_linear, rwkv6_scan)
 
 __all__ = ["ops", "ref", "flash_attention", "galore_adamw_step",
-           "galore_precond_step", "rwkv6_scan"]
+           "galore_precond_step", "lowrank_linear", "rwkv6_scan"]

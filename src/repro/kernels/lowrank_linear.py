@@ -1,0 +1,102 @@
+"""Fused lift-free low-rank linear apply — the factored client weight read.
+
+A factored client's effective weight is ``W_eff = scale·W + lift(R̃, B)``
+(rank-r delta ``R̃`` around the broadcast base ``W``). Materializing
+``W_eff`` costs an O(m·n·r) lift GEMM plus an O(m·n) transient buffer per
+target leaf per local step. This kernel computes the *apply* instead,
+
+  right-projected block (m ≥ n; basis B (n, r), delta R̃ (m, r)):
+      y = scale·(x @ W) + (x @ R̃) @ Bᵀ
+  left-projected block (m < n; basis B (m, r), delta R̃ (r, n)):
+      y = scale·(x @ W) + (x @ B) @ R̃
+
+as split matmuls — O(t·r·(m+n)) extra work on top of the unavoidable base
+GEMM, with the dense ``m×n`` lifted weight never existing. One VMEM-resident
+pass per row tile of ``x``: the base GEMM, both split GEMMs, and the scaled
+add all happen before the tile's output leaves VMEM.
+
+Grid handling mirrors ``galore_adamw.py``: the tile count is
+``ceil(t / block)`` (``pl.cdiv``) with the trailing partial tile masked by
+Pallas block clipping — no divisibility requirement on the token dim.
+
+The kernel is the *forward* of the lift-free delta read; its backward (the
+projected-cotangent VJP — grad wrt R̃ arrives already in rank-r coordinates)
+lives in ``models.layers.lowrank_apply``, which consumes this kernel via
+``ops.lowrank_linear`` on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RIGHT = "right"
+LEFT = "left"
+
+
+def infer_side(w_shape, basis_shape, rt_shape) -> str:
+    """Recover the projection side from buffer shapes (Appendix A.1 layout:
+    right ⇒ basis (n, r), delta (m, r); left ⇒ basis (m, r), delta (r, n))."""
+    mm, nn = w_shape[-2:]
+    dim, r = basis_shape[-2:]
+    if dim == nn and rt_shape[-2:] == (mm, r):
+        return RIGHT
+    if dim == mm and rt_shape[-2:] == (r, nn):
+        return LEFT
+    raise ValueError(f"inconsistent lowrank shapes: w {w_shape}, "
+                     f"basis {basis_shape}, rt {rt_shape}")
+
+
+def _kernel(scale_ref, x_ref, w_ref, basis_ref, rt_ref, y_out, *, side):
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    basis = basis_ref[...].astype(jnp.float32)
+    rt = rt_ref[...].astype(jnp.float32)
+    if side == RIGHT:
+        # (bt, m) @ (m, r) @ (r, n)
+        delta = jnp.dot(jnp.dot(x, rt, preferred_element_type=jnp.float32),
+                        basis.T, preferred_element_type=jnp.float32)
+    else:
+        # (bt, m) @ (m, r) @ (r, n)
+        delta = jnp.dot(jnp.dot(x, basis, preferred_element_type=jnp.float32),
+                        rt, preferred_element_type=jnp.float32)
+    y_out[...] = (scale_ref[0, 0] * base + delta).astype(y_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("side", "block_rows",
+                                             "interpret"))
+def lowrank_linear(x, w, basis, rt, scale, *, side=None, block_rows=128,
+                   interpret=False):
+    """Fused ``y = scale·(x @ w) + split-matmul(x, basis, rt)`` for one block.
+
+    x (..., t, m); w (m, n); right side: basis (n, r), rt (m, r); left side:
+    basis (m, r), rt (r, n). ``scale`` is the scalar base multiplier
+    (``base_scale = (1-ηλ)^t``). Returns y (..., t, n) in the base-GEMM
+    result dtype; fp32 accumulation throughout.
+    """
+    side = side or infer_side(w.shape, basis.shape, rt.shape)
+    lead = x.shape[:-1]
+    mm, nn = w.shape
+    x2 = x.reshape((-1, mm))
+    t = x2.shape[0]
+    bt = min(block_rows, t)
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    r = basis.shape[-1]
+    bshape = (nn, r) if side == RIGHT else (mm, r)
+    rshape = (mm, r) if side == RIGHT else (r, nn)
+    y = pl.pallas_call(
+        functools.partial(_kernel, side=side),
+        grid=(pl.cdiv(t, bt),),
+        in_specs=[pl.BlockSpec((1, 1), lambda i: (0, 0)),   # scale (SMEM-like)
+                  pl.BlockSpec((bt, mm), lambda i: (i, 0)),
+                  pl.BlockSpec((mm, nn), lambda i: (0, 0)),
+                  pl.BlockSpec(bshape, lambda i: (0, 0)),
+                  pl.BlockSpec(rshape, lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bt, nn), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, nn), out_dtype),
+        interpret=interpret,
+    )(jnp.full((1, 1), scale, jnp.float32), x2, w, basis, rt)
+    return y.reshape(lead + (nn,))

@@ -11,6 +11,7 @@ import jax
 from .flash_attention import flash_attention as _flash
 from .galore_adamw import galore_adamw_step as _galore
 from .galore_adamw import galore_precond_step as _galore_precond
+from .lowrank_linear import lowrank_linear as _lowrank
 from .rwkv6_scan import rwkv6_scan as _rwkv6
 
 
@@ -32,6 +33,11 @@ def galore_adamw_step(w, g, basis, m, v, count, **kw):
 def galore_precond_step(g, basis, m, v, count, **kw):
     kw.setdefault("interpret", _interpret())
     return _galore_precond(g, basis, m, v, count, **kw)
+
+
+def lowrank_linear(x, w, basis, rt, scale, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _lowrank(x, w, basis, rt, scale, **kw)
 
 
 def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk=128):

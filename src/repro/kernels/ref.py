@@ -32,6 +32,26 @@ def galore_adamw_ref(w, g, basis, m, v, *, count, b1=0.9, b2=0.999, eps=1e-8,
     return w_new.astype(w.dtype), m_new, v_new
 
 
+def lowrank_linear_ref(x, w, basis, rt, scale, *, side):
+    """Lift-free low-rank linear apply for one factored block.
+
+    x (..., t, m); w (m, n); right: basis (n, r), rt (m, r) —
+    ``y = scale·(x@w) + (x@rt)@basisᵀ``; left: basis (m, r), rt (r, n) —
+    ``y = scale·(x@w) + (x@basis)@rt``. fp32 accumulation; result in the
+    base-GEMM dtype. Mathematically ``x @ (scale·w + lift(rt, basis))``
+    with the dense lifted weight never materialized.
+    """
+    x32 = x.astype(jnp.float32)
+    base = scale * (x32 @ w.astype(jnp.float32))
+    b32 = basis.astype(jnp.float32)
+    r32 = rt.astype(jnp.float32)
+    if side == "right":
+        delta = (x32 @ r32) @ b32.T
+    else:
+        delta = (x32 @ b32) @ r32
+    return (base + delta).astype(jnp.result_type(x.dtype, w.dtype))
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
     """q (B, Lq, H, D), k/v (B, Lk, Hkv, D), GQA by head grouping."""
     b, lq, h, d = q.shape

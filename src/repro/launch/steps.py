@@ -20,13 +20,22 @@ reference path).
 
 Client memory model of the round program (mirrors ``core.fed``): with the
 default ``factored_clients=True`` every client's round state is the rank-r
-factored accumulator ``R_i`` around the broadcast global base — the local
-step reads ``base_scale·W + lift(R_i)`` transiently (weight decay rides the
-scalar ``base_scale``; ``galore.factored_adamw_step``), and 𝒜 collapses to
-``base_scale·W + Σ wᵢ lift(Rᵢ)`` with no dense (C, m, n) weight stack
-anywhere in the program. ``client_chunk=B`` streams the cohort through the
-round in C/B sequential chunks (a ``lax.scan`` over the chunked client axis),
-bounding the dense forward/backward working set by B clients. Stacked client
+factored accumulator ``R_i`` around the broadcast global base, and with the
+default ``lift_free=True`` the local step is **lift-free**: target leaves
+enter the model as ``models.layers.LowRankDelta`` nodes whose delta-aware
+projections compute ``base_scale·(x@W) + split-matmul(R_i)`` directly
+(``kernels.lowrank_linear`` on TPU) and whose custom VJP returns the ``R_i``
+cotangent already in rank-r coordinates — no ``base_scale·W + lift(R_i)``
+transient, no dense m×n gradient, exact global-norm clipping via the VJP's
+dense-norm probes. 𝒜 collapses to ``base_scale·W + Σ wᵢ lift(Rᵢ)`` with no
+dense (C, m, n) weight stack anywhere in the program. ``lift_free=False``
+keeps the transient-lift read (the parity oracle); ``refresh_mode='svd'``
+forces it too, since data-driven refreshes need the dense per-client
+gradient. In-step seeded-random refreshes are hoisted before the forward
+(``galore.maybe_refresh_instep``) so cotangents arrive on the refreshed
+basis. ``client_chunk=B`` streams the cohort through the round in C/B
+sequential chunks (a ``lax.scan`` over the chunked client axis), bounding
+the dense forward/backward working set by B clients. Stacked client
 optimizer states ride the GaLore count/seed UNBATCHED (``galore.
 stack_opt_state`` layout) so the in-step ``count % τ`` refresh stays a real
 ``lax.cond`` under the client vmap. The factored client path requires every
@@ -68,10 +77,14 @@ def galore_target_fn(cfg: ArchConfig) -> Callable:
         if "/moe/" in path or "/shared/" in path:
             return False
         last = path.split("/")[-1]
-        if "/attn/" in path:
-            return True
-        if "/mlp/" in path:
-            return True
+        if "/attn/" in path or "/mlp/" in path:
+            # Stacked scan-block layout: the projection weights are the 3-D
+            # (nb, m, n) leaves (one projector per layer). The 2-D leaves
+            # under these prefixes are stacked bias/norm VECTORS (bq/bk/bv,
+            # q_a_norm, …) — excluded from the target split, i.e. FROZEN
+            # alongside embeddings/routers (the paper's target modules are
+            # the projections only).
+            return leaf.ndim >= 3
         if "/mamba/" in path:
             return last in ("in_proj", "out_proj")
         if "/tmix/" in path:
@@ -99,6 +112,12 @@ class TrainSpec:
     # when forced True).
     fused: bool = True
     use_pallas: Optional[bool] = None
+    # Lift-free factored local steps (module docstring): delta-aware forward
+    # + projected-cotangent backward instead of the per-leaf transient lift.
+    # Auto-disabled when the factored client model doesn't apply or
+    # refresh_mode='svd' needs dense gradients. False = transient-lift
+    # oracle.
+    lift_free: bool = True
     # Mesh axes carrying the client dimension. jax.vmap(spmd_axis_name=...)
     # pins every per-client intermediate's leading dim to these axes —
     # without it SPMD replicated the client dim across the data axis
@@ -241,7 +260,8 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
                         state_sync: Optional[str] = None,
                         factored_sync: bool = True,
                         factored_clients: bool = True,
-                        client_chunk: Optional[int] = None) -> Callable:
+                        client_chunk: Optional[int] = None,
+                        lift_free: Optional[bool] = None) -> Callable:
     """A full federated round (Algorithm 1) as one SPMD program:
 
       broadcast (implicit: clients start from the shared global base) →
@@ -256,6 +276,9 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
     (module docstring); it requires in-step refreshes to land on local step 0
     (``refresh_every % local_steps == 0``) and every trainable leaf to be a
     target block, falling back to the dense client round otherwise.
+    ``lift_free`` (None = ``spec.lift_free``) additionally runs the factored
+    local phase through the delta context — zero lift GEMMs and zero dense
+    gradient cotangents; auto-disabled for ``refresh_mode='svd'``.
     ``client_chunk=B`` (must divide ``n_clients``, and B must still cover the
     client mesh axes) runs the local phase in C/B sequential chunks.
     ``state_sync=None`` preserves the legacy 𝒯→𝒜 program: raw end-of-round
@@ -268,6 +291,17 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
     # R_i ≠ 0, i.e. refreshes only at local step 0 (count ≡ 0 mod τ there).
     factored_ok = (factored_clients
                    and spec.refresh_every % spec.local_steps == 0)
+    # Lift-free needs every in-step refresh to be seeded-random (the hoisted
+    # refresh never sees a gradient): 'svd' mode keeps the transient read.
+    # MLA with blockwise attention reads kv_b once per chunk, which breaks
+    # the clip-norm probe's exactness (per-use ‖·‖² sum misses cross-chunk
+    # terms — models.layers.lowrank_apply): keep the transient read there.
+    if lift_free is None:
+        lift_free = spec.lift_free
+    multi_read = (cfg.attn_chunk and any(
+        mix == "mla" for mix, _ in cfg.layer_kinds()))
+    liftfree_ok = (lift_free and spec.refresh_mode != "svd"
+                   and not multi_read)
     chunk = client_chunk or n_clients
     if n_clients % chunk:
         raise ValueError(f"client_chunk={chunk} must divide n_clients="
@@ -295,6 +329,28 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
             def loss_of(t):
                 return model_lib.loss_fn(merge_dense(frozen, t), cfg, batch)
             loss, grads = jax.value_and_grad(loss_of)(tr)
+            dl, scale, st = gal.factored_adamw_step(
+                gcfg, grads, st, dl, scale, lr=spec.lr,
+                weight_decay=spec.weight_decay, clip_norm=spec.clip_norm)
+            return (dl, scale, st), loss
+        (deltas, scale, opt_state), losses = jax.lax.scan(
+            one, (deltas, jnp.ones([], jnp.float32), opt_state), batches)
+        return deltas, opt_state, losses, scale
+
+    def client_round_liftfree(deltas, frozen, opt_state, batches,
+                              global_trainable):
+        """The lift-free local phase: hoisted seeded-random refresh, delta-
+        context forward (LowRankDelta leaves — no per-leaf transient lift),
+        projected-cotangent backward, factored AdamW on the LiftFreeGrads
+        bundle (projection GEMM skipped, clipping via the norm probes)."""
+        def one(carry, batch):
+            dl, scale, st = carry
+            g0 = gal.maybe_refresh_instep(gcfg, gal.galore_state_of(st))
+            st = gal.replace_galore_state(st, g0)
+            def loss_of(t):
+                return model_lib.loss_fn(merge_dense(frozen, t), cfg, batch)
+            loss, grads = gal.liftfree_value_and_grad(
+                loss_of, global_trainable, dl, g0, scale)
             dl, scale, st = gal.factored_adamw_step(
                 gcfg, grads, st, dl, scale, lr=spec.lr,
                 weight_decay=spec.weight_decay, clip_norm=spec.clip_norm)
@@ -335,10 +391,13 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
             is_leaf=lambda x: isinstance(x, (gal.GaloreBlockState,
                                              gal.DenseMoments)))
 
+        client_fn = (client_round_liftfree if liftfree_ok
+                     else client_round_factored)
+
         def local_fn(opt_chunk, batch_chunk):
             with batch_axes_override(()):
                 return jax.vmap(
-                    client_round_factored, in_axes=(0, None, axes, 0, None),
+                    client_fn, in_axes=(0, None, axes, 0, None),
                     out_axes=(0, axes, 0, 0),
                     spmd_axis_name=spec.client_axes)(
                     deltas0, frozen, opt_chunk, batch_chunk,

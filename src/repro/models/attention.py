@@ -12,7 +12,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .layers import apply_rope, constrain, dense_init
+from .layers import apply_rope, constrain, dense, dense_init
 
 NEG_INF = -1e30
 
@@ -135,9 +135,9 @@ def gqa_forward(p, x, positions, *, n_heads, n_kv, head_dim, rope=True,
                 rope_theta=1e4, window=0, attn_chunk=0):
     """Training/prefill attention over a full sequence. x (B,L,D)."""
     b, l, _ = x.shape
-    q = x @ p["wq"] + p.get("bq", 0)
-    k = x @ p["wk"] + p.get("bk", 0)
-    v = x @ p["wv"] + p.get("bv", 0)
+    q = dense(x, p["wq"]) + p.get("bq", 0)
+    k = dense(x, p["wk"]) + p.get("bk", 0)
+    v = dense(x, p["wv"]) + p.get("bv", 0)
     q = constrain(_split_heads(q, n_heads, head_dim),
                   "batch", None, "model", None)
     k = constrain(_split_heads(k, n_kv, head_dim),
@@ -156,7 +156,7 @@ def gqa_forward(p, x, positions, *, n_heads, n_kv, head_dim, rope=True,
             mask = mask[None]
         ctx = attend(q, k, v, mask)
     ctx = constrain(ctx, "batch", None, "model", None)
-    return ctx.reshape(b, l, n_heads * head_dim) @ p["wo"], (k, v)
+    return dense(ctx.reshape(b, l, n_heads * head_dim), p["wo"]), (k, v)
 
 
 class KVCache(NamedTuple):
@@ -224,13 +224,13 @@ def mla_init(key, d_model: int, n_heads: int, *, q_lora: int, kv_lora: int,
 def _mla_qkv(p, x, positions, n_heads, qk_nope, qk_rope, kv_lora, rope_theta):
     from .layers import rms_norm
     b, l, _ = x.shape
-    q = rms_norm(x @ p["q_a"], p["q_a_norm"]) @ p["q_b"]
+    q = dense(rms_norm(dense(x, p["q_a"]), p["q_a_norm"]), p["q_b"])
     q = constrain(q.reshape(b, l, n_heads, qk_nope + qk_rope),
                   "batch", None, "model", None)
     q_nope, q_pe = q[..., :qk_nope], q[..., qk_nope:]
     q_pe = apply_rope(q_pe, positions, rope_theta)
 
-    kv = x @ p["kv_a"]
+    kv = dense(x, p["kv_a"])
     c_kv = constrain(rms_norm(kv[..., :kv_lora], p["kv_a_norm"]),
                      "batch", None, None)                  # (B,L,kv_lora)
     k_pe = kv[..., kv_lora:][:, :, None, :]                 # (B,L,1,rope)
@@ -249,15 +249,19 @@ def mla_forward(p, x, positions, *, n_heads, qk_nope, qk_rope, kv_lora,
     b, l, _ = x.shape
     q_nope, q_pe, c_kv, k_pe = _mla_qkv(p, x, positions, n_heads, qk_nope,
                                         qk_rope, kv_lora, rope_theta)
-    kvb = p["kv_b"].reshape(kv_lora, n_heads, qk_nope + v_dim)
     scale = 1.0 / jnp.sqrt(qk_nope + qk_rope).astype(jnp.float32)
 
     if attn_chunk and l >= attn_chunk:
-        ctx = _mla_blockwise(q_nope, q_pe, c_kv, k_pe, kvb, qk_nope,
+        ctx = _mla_blockwise(q_nope, q_pe, c_kv, k_pe, p["kv_b"], qk_nope,
                              scale, window, min(attn_chunk, l // 2))
     else:
-        k_nope = jnp.einsum("blc,chd->blhd", c_kv, kvb[..., :qk_nope])
-        v = jnp.einsum("blc,chd->blhd", c_kv, kvb[..., qk_nope:])
+        # Expand on the activation side (kv_b consumed as one delta-aware
+        # matmul, then reshape/split the result — identical per-element dots
+        # to the weight-side reshape + einsum it replaces).
+        kv_full = dense(c_kv, p["kv_b"]).reshape(b, l, n_heads,
+                                                 qk_nope + v_dim)
+        k_nope = kv_full[..., :qk_nope]
+        v = kv_full[..., qk_nope:]
         scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope,
                              preferred_element_type=jnp.float32)
                   + jnp.einsum("bqhd,bkd->bhqk", q_pe, k_pe,
@@ -269,14 +273,14 @@ def mla_forward(p, x, positions, *, n_heads, qk_nope, qk_rope, kv_lora,
         w = jax.nn.softmax(scores, axis=-1)
         ctx = jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), v,
                          preferred_element_type=jnp.float32).astype(x.dtype)
-    out = ctx.reshape(b, l, n_heads * v_dim) @ p["wo"]
+    out = dense(ctx.reshape(b, l, n_heads * v_dim), p["wo"])
     return out, (c_kv, k_pe)
 
 
-def _mla_blockwise(q_nope, q_pe, c_kv, k_pe, kvb, qk_nope, scale, window,
+def _mla_blockwise(q_nope, q_pe, c_kv, k_pe, kv_b, qk_nope, scale, window,
                    chunk):
     b, lq, h, _ = q_nope.shape
-    v_dim = kvb.shape[-1] - qk_nope
+    v_dim = kv_b.shape[-1] // h - qk_nope
     cq = ck = min(chunk, lq)
     outs = []
     for qi in range(lq // cq):
@@ -294,9 +298,12 @@ def _mla_blockwise(q_nope, q_pe, c_kv, k_pe, kvb, qk_nope, scale, window,
                 continue                       # fully outside the window
             ckv_blk = c_kv[:, k_lo:k_lo + ck]
             kpe_blk = k_pe[:, k_lo:k_lo + ck]
-            k_nope_blk = jnp.einsum("bsc,chd->bshd", ckv_blk,
-                                    kvb[..., :qk_nope])
-            v_blk = jnp.einsum("bsc,chd->bshd", ckv_blk, kvb[..., qk_nope:])
+            # Per-chunk activation-side expansion (kv_b may be a lift-free
+            # LowRankDelta; note the per-chunk reads make the clip-norm
+            # probe a per-use sum — see models.layers).
+            kv_blk = dense(ckv_blk, kv_b).reshape(b, ck, h, qk_nope + v_dim)
+            k_nope_blk = kv_blk[..., :qk_nope]
+            v_blk = kv_blk[..., qk_nope:]
             s = (jnp.einsum("bqhd,bshd->bhqs", qn_blk, k_nope_blk,
                             preferred_element_type=jnp.float32)
                  + jnp.einsum("bqhd,bsd->bhqs", qp_blk, kpe_blk,

@@ -1,14 +1,269 @@
-"""Shared building blocks: norms, activations, MLPs, embeddings, RoPE."""
+"""Shared building blocks: norms, activations, MLPs, embeddings, RoPE —
+plus the **lift-free delta context** (:class:`LowRankDelta` / :func:`dense`)
+that lets a factored federated client run its forward/backward without ever
+materializing ``base_scale·W + lift(R̃)`` or a dense ``m×n`` gradient."""
 from __future__ import annotations
 
-from typing import Optional
+import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels import ops as kops
+
 
 def dense_init(key, shape, scale: float = 0.02, dtype=jnp.float32):
     return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+# ------------------------------------------------- lift-free delta context --
+#
+# A factored client's effective weight is W_eff = scale·W + lift(R̃, B): a
+# rank-r delta around the broadcast base. Materializing W_eff costs an
+# O(m·n·r) lift GEMM + an O(m·n) transient per target leaf per local step,
+# and AD through it produces a dense m×n cotangent that the optimizer
+# immediately re-projects to rank r. Neither needs to exist: a LowRankDelta
+# *replaces the weight leaf itself* inside the loss closure, and every
+# `x @ w`-style read routes through `dense()` /
+# `__rmatmul__`, which computes the split-matmul apply
+#
+#   right (m ≥ n):  y = scale·(x@W) + (x@R̃)@Bᵀ        R̃ (m, r), B (n, r)
+#   left  (m < n):  y = scale·(x@W) + (x@B)@R̃          B (m, r), R̃ (r, n)
+#
+# under a custom_vjp whose backward emits the cotangent for R̃ **already in
+# rank-r coordinates** (right: xᵀ(∂y B); left: (xB)ᵀ∂y — never the dense
+# xᵀ∂y) plus an exact dense-gradient norm probe for global-norm clipping.
+# Being a pytree node, the context survives `lax.scan` over stacked layer
+# params, vmap over clients, and remat — each transformation just maps the
+# five fields. LoRA / dense methods never construct LowRankDelta leaves, so
+# `dense(x, plain_array)` is exactly `x @ w` for them.
+
+_LOWRANK_PALLAS_OVERRIDE = [None]   # None = auto (TPU backend only)
+
+
+class lowrank_pallas_override:
+    """Force the fused ``lowrank_linear`` kernel on/off inside ``dense``
+    (None = auto: TPU only; tests force True to run the kernel in interpret
+    mode). Usable as a context manager around tracing."""
+
+    def __init__(self, flag):
+        self.flag = flag
+
+    def __enter__(self):
+        _LOWRANK_PALLAS_OVERRIDE.append(self.flag)
+        return self
+
+    def __exit__(self, *exc):
+        _LOWRANK_PALLAS_OVERRIDE.pop()
+        return False
+
+
+def _use_lowrank_pallas() -> bool:
+    flag = _LOWRANK_PALLAS_OVERRIDE[-1]
+    if flag is not None:
+        return flag
+    return jax.default_backend() == "tpu"
+
+
+class LowRankDelta(NamedTuple):
+    """A factored target leaf: the base weight plus its never-lifted rank-r
+    delta. All five fields are pytree children (arrays), so the node slices
+    cleanly under ``lax.scan`` over stacked (nb, m, n) layer params."""
+    w: jnp.ndarray       # (..., m, n) broadcast base weight
+    basis: jnp.ndarray   # (..., n, r) right | (..., m, r) left (orthonormal)
+    rt: jnp.ndarray      # (..., m, r) right | (..., r, n) left — the delta R̃
+    nsq: jnp.ndarray     # (...,) zeros — dense-grad ‖·‖² probe (cotangent out)
+    scale: jnp.ndarray   # (...,) base_scale = (1-ηλ)^t
+
+    @property
+    def shape(self):
+        return self.w.shape
+
+    @property
+    def dtype(self):
+        return self.w.dtype
+
+    @property
+    def ndim(self):
+        return self.w.ndim
+
+    @property
+    def side(self) -> str:
+        """proj_type=std side rule on the ambient shape (right iff m >= n)."""
+        m, n = self.w.shape[-2:]
+        return "right" if m >= n else "left"
+
+    def __rmatmul__(self, x):
+        """``x @ delta_leaf`` — arbitrary losses work without edits."""
+        return dense(x, self)
+
+    def read(self):
+        """Materialize the effective leaf ``scale·w + lift(rt)`` for
+        non-matmul consumption (e.g. stacked bias blocks added to
+        activations). The custom VJP still returns the rank-r cotangent and
+        the exact norm probe — here the leaf is read directly, so the dense
+        gradient IS the incoming cotangent and the probe is just ``‖∂y‖²``.
+        The transient lift this reintroduces is O(dim·r) for the skinny
+        leaves that take this path, not the O(m·n·r) projection lift."""
+        return lowrank_read(self.side, self.w, self.basis, self.rt,
+                            self.nsq, self.scale)
+
+    def __add__(self, other):
+        return self.read() + other
+
+    def __radd__(self, other):
+        return other + self.read()
+
+
+def _lift(rt, basis, side):
+    """project_back with leading batch dims (core.projector conventions,
+    inlined to keep this module dependency-free of core)."""
+    if side == "right":
+        return jnp.einsum("...mr,...nr->...mn", rt, basis)
+    return jnp.einsum("...mr,...rn->...mn", basis, rt)
+
+
+def _project(g, basis, side):
+    if side == "right":
+        return jnp.einsum("...mn,...nr->...mr", g, basis)
+    return jnp.einsum("...mr,...mn->...rn", basis, g)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def lowrank_read(side, w, basis, rt, nsq, scale):
+    """Materialized delta-leaf read ``scale·w + lift(rt, basis)`` — the
+    fallback for target leaves consumed other than by matmul. Backward:
+    cotangent for ``rt`` arrives projected (``project(∂y, B)``), the norm
+    probe is the exact ``‖∂y‖²`` (the dense gradient of a directly-read leaf
+    is its own cotangent)."""
+    del nsq
+    lead = w.shape[:-2]
+    s = jnp.asarray(scale, jnp.float32).reshape(lead + (1, 1))
+    out = s * w.astype(jnp.float32) + _lift(rt.astype(jnp.float32),
+                                            basis.astype(jnp.float32), side)
+    return out.astype(w.dtype)
+
+
+def _lowrank_read_fwd(side, w, basis, rt, nsq, scale):
+    return lowrank_read(side, w, basis, rt, nsq, scale), (w, basis, rt, scale)
+
+
+def _lowrank_read_bwd(side, res, dy):
+    w, basis, rt, scale = res
+    dy32 = dy.astype(jnp.float32)
+    drt = _project(dy32, basis.astype(jnp.float32), side)
+    dnsq = jnp.sum(dy32 * dy32, axis=(-2, -1))
+    return (jnp.zeros_like(w), jnp.zeros_like(basis), drt, dnsq,
+            jnp.zeros_like(scale))
+
+
+lowrank_read.defvjp(_lowrank_read_fwd, _lowrank_read_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def lowrank_apply(side, use_pallas, x, w, basis, rt, nsq, scale):
+    """The lift-free delta read: ``x @ (scale·w + lift(rt, basis))`` computed
+    as split matmuls (fused Pallas kernel on TPU). ``nsq`` (zeros) is the
+    norm probe: its cotangent is the exact squared Frobenius norm of the
+    dense weight gradient ``xᵀ∂y`` — computed from token Grams, so
+    global-norm clipping matches the transient-lift path bit-for-bit in
+    exact arithmetic without the m×n cotangent ever existing. Caveat: AD
+    sums the probe across *uses* of a leaf, so a weight read more than once
+    per forward (e.g. MLA blockwise ``kv_b``, once per chunk) yields
+    ``Σᵤ‖gᵤ‖²`` instead of the exact ``‖Σᵤgᵤ‖²`` — the sign-indefinite
+    cross-use terms are missing, so it is neither a bound nor exact.
+    ``make_fed_round_step`` gates such configurations (MLA + attn_chunk)
+    off the lift-free path; every single-read weight is exact."""
+    del nsq
+    if use_pallas:
+        return kops.lowrank_linear(x, w, basis, rt, scale, side=side)
+    x32 = x.astype(jnp.float32)
+    base = scale * (x32 @ w.astype(jnp.float32))
+    b32 = basis.astype(jnp.float32)
+    r32 = rt.astype(jnp.float32)
+    delta = (x32 @ r32) @ b32.T if side == "right" else (x32 @ b32) @ r32
+    return (base + delta).astype(jnp.result_type(x.dtype, w.dtype))
+
+
+_SQNORM_TILE = 1024
+
+
+def _sqnorm_gram(x2, dy2, tile: int = _SQNORM_TILE):
+    """Exact ``‖x2ᵀ dy2‖²_F = Σᵢⱼ (x2 x2ᵀ)ᵢⱼ (dy2 dy2ᵀ)ᵢⱼ`` without the
+    (m, n) product. Short token counts take one (t, t) Gram pair; longer
+    ones scan over row tiles so the transient working set is O(nt·tile²)
+    per step instead of O(t²) — the probe must never cost more memory than
+    the m×n object it replaces. Zero-padding the tail tile is sound (zero
+    rows contribute zero to both Grams)."""
+    t, _ = x2.shape
+    if t <= tile:
+        return jnp.sum((x2 @ x2.T) * (dy2 @ dy2.T))
+    nt = -(-t // tile)
+    pad = nt * tile - t
+    xp = jnp.pad(x2, ((0, pad), (0, 0))).reshape(nt, tile, -1)
+    dyp = jnp.pad(dy2, ((0, pad), (0, 0))).reshape(nt, tile, -1)
+
+    def row(acc, xi_dyi):
+        xi, dyi = xi_dyi
+        # all j-tiles against this i-tile in one batched contraction
+        cx = jnp.einsum("tm,jsm->jts", xi, xp)
+        cd = jnp.einsum("tn,jsn->jts", dyi, dyp)
+        return acc + jnp.sum(cx * cd), None
+
+    acc, _ = jax.lax.scan(row, jnp.zeros((), jnp.float32), (xp, dyp))
+    return acc
+
+
+def _lowrank_fwd(side, use_pallas, x, w, basis, rt, nsq, scale):
+    y = lowrank_apply(side, use_pallas, x, w, basis, rt, nsq, scale)
+    return y, (x, w, basis, rt, scale)
+
+
+def _lowrank_bwd(side, use_pallas, res, dy):
+    del use_pallas
+    x, w, basis, rt, scale = res
+    m, n = w.shape
+    dy32 = dy.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    b32 = basis.astype(jnp.float32)
+    r32 = rt.astype(jnp.float32)
+    # dx through the effective weight, split low-rank (never lift(rt)).
+    if side == "right":
+        dx = scale * (dy32 @ w.astype(jnp.float32).T) + (dy32 @ b32) @ r32.T
+    else:
+        dx = scale * (dy32 @ w.astype(jnp.float32).T) + (dy32 @ r32.T) @ b32.T
+    # Projected cotangent for R̃ — rank-r coordinates, no dense xᵀ∂y:
+    #   right: xᵀ(∂y B) (m, r);  left: (x B)ᵀ ∂y (r, n).
+    x2 = x32.reshape((-1, m))
+    dy2 = dy32.reshape((-1, n))
+    if side == "right":
+        drt = x2.T @ (dy2 @ b32)
+    else:
+        drt = (x2 @ b32).T @ dy2
+    # Exact ‖xᵀ∂y‖²_F via token Grams: O(t²(m+n)) flops with t = tokens, no
+    # m×n object, transients bounded by the token tile. DCE'd entirely when
+    # the caller never reads the probe cotangent (clip_norm=None).
+    dnsq = _sqnorm_gram(x2, dy2)
+    # w / basis / scale are never differentiated by the lift-free step; the
+    # zero cotangents exist only to satisfy the VJP signature and are dead
+    # code after DCE (asserted GEMM-free by the shape-probe test).
+    return (dx.astype(x.dtype), jnp.zeros_like(w), jnp.zeros_like(basis),
+            drt, dnsq, jnp.zeros_like(scale))
+
+
+lowrank_apply.defvjp(_lowrank_fwd, _lowrank_bwd)
+
+
+def dense(x, w):
+    """Delta-aware linear apply: ``x @ w`` for plain weights; the lift-free
+    split-matmul read (projected-cotangent backward) when ``w`` is a
+    :class:`LowRankDelta` leaf. Model projections route through this so
+    ``loss_fn(params, batch)`` signatures never change."""
+    if isinstance(w, LowRankDelta):
+        return lowrank_apply(w.side, _use_lowrank_pallas(), x, w.w, w.basis,
+                             w.rt, w.nsq, w.scale)
+    return x @ w
 
 
 import contextlib
@@ -119,8 +374,8 @@ def glu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
 
 def glu_mlp(p, x, act: str = "silu"):
     """Gated MLP (SwiGLU family) — llama/mistral/command-r style."""
-    gate = ACTS[act](x @ p["w_gate"])
-    return (gate * (x @ p["w_up"])) @ p["w_down"]
+    gate = ACTS[act](dense(x, p["w_gate"]))
+    return dense(gate * dense(x, p["w_up"]), p["w_down"])
 
 
 def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
@@ -131,7 +386,7 @@ def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
 
 def mlp(p, x, act: str = "gelu"):
     """Plain 2-layer MLP (starcoder2 / musicgen style)."""
-    return ACTS[act](x @ p["w_up"]) @ p["w_down"]
+    return dense(ACTS[act](dense(x, p["w_up"])), p["w_down"])
 
 
 # ------------------------------------------------------------------ RoPE ----

@@ -14,7 +14,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .layers import dense_init
+from .layers import dense, dense_init
 
 
 def mamba_dims(d_model: int, expand: int = 2, d_state: int = 16,
@@ -83,7 +83,7 @@ def mamba_forward(p, x, state: MambaState = None, *, d_model: int,
     """x (B, L, D) -> (B, L, D) [, final MambaState]."""
     d_inner, dt_rank, d_state, d_conv = mamba_dims(d_model, expand, d_state, d_conv)
     b_, l, _ = x.shape
-    xz = x @ p["in_proj"]
+    xz = dense(x, p["in_proj"])
     xc, z = jnp.split(xz, 2, axis=-1)
     init_taps = None if state is None else state.conv
     xc = jax.nn.silu(_causal_depthwise_conv(xc, p["conv_w"], p["conv_b"],
@@ -108,7 +108,7 @@ def mamba_forward(p, x, state: MambaState = None, *, d_model: int,
     y = jnp.moveaxis(ys, 0, 1)                      # (B, L, d_inner)
     y = y + p["d_skip"][None, None, :] * xc.astype(jnp.float32)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    out = y @ p["out_proj"]
+    out = dense(y, p["out_proj"])
     if return_state:
         taps = jnp.concatenate([init_taps if init_taps is not None
                                 else jnp.zeros((b_, d_conv - 1, d_inner), x.dtype),
@@ -122,7 +122,7 @@ def mamba_decode(p, x, state: MambaState, *, d_model: int, expand: int = 2,
     """One-token decode. x (B, 1, D)."""
     d_inner, dt_rank, d_state, d_conv = mamba_dims(d_model, expand, d_state, d_conv)
     b_ = x.shape[0]
-    xz = x[:, 0, :] @ p["in_proj"]                  # (B, 2*di)
+    xz = dense(x[:, 0, :], p["in_proj"])                  # (B, 2*di)
     xc_new, z = jnp.split(xz, 2, axis=-1)
     taps = jnp.concatenate([state.conv.astype(xc_new.dtype),
                             xc_new[:, None, :]], axis=1)   # (B, d_conv, di)
@@ -135,6 +135,6 @@ def mamba_decode(p, x, state: MambaState, *, d_model: int, expand: int = 2,
     y = jnp.einsum("bds,bs->bd", h, cmat)
     y = y + p["d_skip"][None, :] * xc.astype(jnp.float32)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    out = (y @ p["out_proj"])[:, None, :]
+    out = dense(y, p["out_proj"])[:, None, :]
     new_state = MambaState(conv=taps[:, 1:, :].astype(state.conv.dtype), h=h)
     return out, new_state

@@ -19,7 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from .layers import dense_init
+from .layers import dense, dense_init
 
 HEAD_SIZE = 64
 DDLERP_DIM = 32
@@ -114,10 +114,10 @@ def time_mix_forward(p, x, state: RwkvState, d_model: int,
     x_prev = _shifted(x, state.shift_t)
     xr, xk, xv, xg, xw = _ddlerp(p, x, x_prev)      # each (B, L, D) fp32
 
-    r = (xr.astype(x.dtype) @ p["wr"]).reshape(b, l, h, HEAD_SIZE)
-    k = (xk.astype(x.dtype) @ p["wk"]).reshape(b, l, h, HEAD_SIZE)
-    v = (xv.astype(x.dtype) @ p["wv"]).reshape(b, l, h, HEAD_SIZE)
-    g = jax.nn.silu(xg.astype(x.dtype) @ p["wg"])
+    r = dense(xr.astype(x.dtype), p["wr"]).reshape(b, l, h, HEAD_SIZE)
+    k = dense(xk.astype(x.dtype), p["wk"]).reshape(b, l, h, HEAD_SIZE)
+    v = dense(xv.astype(x.dtype), p["wv"]).reshape(b, l, h, HEAD_SIZE)
+    g = jax.nn.silu(dense(xg.astype(x.dtype), p["wg"]))
     decay = p["decay_base"] + jnp.tanh(xw @ p["decay_w1"].astype(jnp.float32)) \
         @ p["decay_w2"].astype(jnp.float32)
     w = jnp.exp(-jnp.exp(decay)).reshape(b, l, h, HEAD_SIZE)       # (0,1)
@@ -136,7 +136,7 @@ def time_mix_forward(p, x, state: RwkvState, d_model: int,
     s_final, ys = jax.lax.scan(step, state.wkv, xs)
     y = jnp.moveaxis(ys, 0, 1).reshape(b, l, d)
     y = _group_norm_heads(y.astype(x.dtype), p["ln_x"], h)
-    out = (y * g.astype(y.dtype)) @ p["wo"]
+    out = dense(y * g.astype(y.dtype), p["wo"])
     if return_state:
         return out, state._replace(shift_t=x[:, -1, :], wkv=s_final)
     return out
@@ -147,8 +147,8 @@ def channel_mix_forward(p, x, state: RwkvState, return_state: bool = False):
     dx = (x_prev - x).astype(jnp.float32)
     xk = (x.astype(jnp.float32) + dx * p["mu"][0][None, None, :]).astype(x.dtype)
     xr = (x.astype(jnp.float32) + dx * p["mu"][1][None, None, :]).astype(x.dtype)
-    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
-    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    k = jnp.square(jax.nn.relu(dense(xk, p["wk"])))
+    out = jax.nn.sigmoid(dense(xr, p["wr"])) * dense(k, p["wv"])
     if return_state:
         return out, state._replace(shift_c=x[:, -1, :])
     return out
