@@ -1,0 +1,135 @@
+"""Fault-injection robustness sweep: dropout x staleness x method.
+
+Drives ``core.population.PopulationRunner`` over a grid of participation
+faults — per-round client dropout (masked inside the fused round via
+weight renormalization + AJIVE joint-basis exclusion) and straggler delays
+(contributions landing k rounds late through the bounded staleness buffer)
+— for FedGaLore and the FedIT (FedAvg-LoRA) baseline, and records the
+drift observatory: projected-moment divergence of the surviving cohort
+around the synced v̄, and the stale-vs-fresh aggregation error of each
+buffered merge.
+
+Acceptance keys (gated by ``scripts/ci.sh --participation-smoke``):
+  masked_round_parity        the no-fault participation run is EXACTLY the
+                             plain engine run (full-participation masks
+                             short-circuit onto the unmasked program —
+                             bit-identity by construction, checked
+                             end-to-end through the eval curves)
+  stale_drift_bounded        every stale merge's relative aggregation error
+                             stays under ``stale_err_bound``
+  fedgalore_degradation_ok   fedgalore's worst-cell accuracy drop (vs its
+                             own no-fault cell) is no worse than the
+                             fedavg-LoRA baseline's, + tolerance
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core.population import ParticipationConfig
+
+from .common import emit, run_federated_trial
+
+DROPOUTS = (0.0, 0.25, 0.5)
+STALENESS = (0, 1, 4)
+METHODS = ("fedgalore", "fedit")        # fedit == FedAvg-LoRA baseline
+
+
+def _cell(method, dropout, staleness, *, rounds, n_clients, seed,
+          straggler_rate):
+    pcfg = ParticipationConfig(
+        dropout_rate=dropout,
+        straggler_rate=(straggler_rate if staleness > 0 else 0.0),
+        max_staleness=staleness, staleness_decay=0.5, seed=seed + 100)
+    r = run_federated_trial(method, alpha=0.5, rounds=rounds,
+                            n_clients=n_clients, lr=5e-3, seed=seed,
+                            participation=pcfg)
+    return {
+        "acc": r["acc"],
+        "acc_curve": r["acc_curve"],
+        "val_curve": r["val_curve"],
+        "drift_curve": r["drift_curve"],
+        "stale_err_curve": r["stale_err_curve"],
+        "max_drift": max(r["drift_curve"] or [0.0]),
+        "max_stale_err": max(r["stale_err_curve"] or [0.0]),
+    }
+
+
+def main(smoke=False, rounds=None, n_clients=4, seed=0, out=None,
+         stale_err_bound=0.5, degradation_tol=0.1, straggler_rate=0.5):
+    rounds = rounds or (4 if smoke else 8)
+    t0 = time.perf_counter()
+
+    # Bit-identity reference: the plain engine run (no participation layer).
+    plain = {m: run_federated_trial(m, alpha=0.5, rounds=rounds,
+                                    n_clients=n_clients, lr=5e-3, seed=seed)
+             for m in METHODS}
+
+    grid = {}
+    n_cells = 0
+    for method in METHODS:
+        grid[method] = {}
+        for d in DROPOUTS:
+            for s in STALENESS:
+                cell = _cell(method, d, s, rounds=rounds,
+                             n_clients=n_clients, seed=seed,
+                             straggler_rate=straggler_rate)
+                grid[method][f"d{d}_s{s}"] = cell
+                n_cells += 1
+
+    # -- acceptance ---------------------------------------------------------
+    # No-fault cell runs the full-participation masks -> must short-circuit
+    # onto the unmasked program: eval curves identical to the plain run.
+    parity = all(
+        grid[m]["d0.0_s0"]["val_curve"] == plain[m]["val_curve"]
+        and grid[m]["d0.0_s0"]["acc_curve"] == plain[m]["acc_curve"]
+        for m in METHODS)
+    max_stale_err = max(c["max_stale_err"] for m in METHODS
+                        for c in grid[m].values())
+    degradation = {
+        m: max(grid[m]["d0.0_s0"]["acc"] - c["acc"]
+               for c in grid[m].values())
+        for m in METHODS}
+    acceptance = {
+        "masked_round_parity": bool(parity),
+        "stale_drift_bounded": bool(max_stale_err <= stale_err_bound),
+        "max_stale_weight_err": float(max_stale_err),
+        "stale_err_bound": float(stale_err_bound),
+        "fedgalore_worst_degradation": float(degradation["fedgalore"]),
+        "baseline_worst_degradation": float(degradation["fedit"]),
+        "degradation_tol": float(degradation_tol),
+        "fedgalore_degradation_ok": bool(
+            degradation["fedgalore"]
+            <= degradation["fedit"] + degradation_tol),
+    }
+    dt = time.perf_counter() - t0
+    result = {"config": {"rounds": rounds, "n_clients": n_clients,
+                         "seed": seed, "smoke": bool(smoke),
+                         "dropouts": list(DROPOUTS),
+                         "staleness": list(STALENESS),
+                         "straggler_rate": straggler_rate},
+              "grid": grid,
+              "plain": {m: {"acc": plain[m]["acc"]} for m in METHODS},
+              "acceptance": acceptance,
+              "wall_s": dt}
+    emit("participation", dt / max(n_cells, 1) * 1e6,
+         (f"parity={int(acceptance['masked_round_parity'])};"
+          f"stale_err={max_stale_err:.4f};"
+          f"galore_deg={degradation['fedgalore']:.3f};"
+          f"fedit_deg={degradation['fedit']:.3f}"))
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer rounds per cell (CI leg)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_participation.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(smoke=args.smoke, rounds=args.rounds, seed=args.seed, out=args.out)

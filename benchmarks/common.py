@@ -28,37 +28,76 @@ def timed(fn, *args, warmup=1, iters=3):
 def run_federated_trial(method: str, alpha, *, rounds=8, n_clients=4,
                         local_steps=8, batch=8, seq=16, n_classes=4,
                         examples=512, lr=2e-2, rank=4, seed=0,
-                        arch="qwen1.5-0.5b"):
-    """One federated fine-tuning run; returns final eval accuracy + curves."""
+                        arch="qwen1.5-0.5b", participation=None,
+                        store_dir=None):
+    """One federated fine-tuning run; returns final eval accuracy + curves.
+
+    ``participation`` (a ``core.population.ParticipationConfig``) drives the
+    run through ``population.PopulationRunner`` instead of bare engine
+    rounds: seeded cohort sampling out of the (possibly larger) virtual
+    population, dropout/straggler fault injection, buffered stale
+    aggregation, and the per-round drift observatory — the returned dict
+    gains ``drift_curve`` (projected-moment divergence) and
+    ``stale_err_curve`` (stale-vs-fresh aggregation error)."""
     cfg = smoke_variant(get_config(arch))
     params = M.init_params(jax.random.PRNGKey(seed), cfg)
     task = seq_classification(examples, n_classes, seq, cfg.vocab_size,
                               seed=seed)
-    batcher = FederatedBatcher(task, n_clients, batch, alpha=alpha, seed=seed)
+    population = n_clients
+    if participation is not None and participation.population:
+        population = participation.population
+    batcher = FederatedBatcher(task, population, batch, alpha=alpha,
+                               seed=seed)
 
     def loss(p, b):
         return M.loss_fn(p, cfg, b)
 
     eng = FedEngine(FedConfig(method=method, rank=rank, lr=lr,
-                              local_steps=local_steps, seed=seed),
+                              local_steps=local_steps, seed=seed,
+                              participation=participation),
                     loss, params, target_fn=galore_target_fn(cfg))
+    runner = None
+    if participation is not None:
+        from repro.core.population import PopulationRunner
+
+        def batches_for(ids, _round):
+            b = batcher.round_batches(local_steps,
+                                      clients=[int(i) for i in ids])
+            return {k: jnp.asarray(v) for k, v in b.items()}
+
+        runner = PopulationRunner(eng, batches_for, cohort=n_clients,
+                                  pcfg=participation, store_dir=store_dir)
     eval_b = batcher.eval_batch(256)
     local_curve, val_curve, acc_curve = [], [], []
+    drift_curve, stale_err_curve = [], []
     for _ in range(rounds):
-        batches = {k: jnp.asarray(v)
-                   for k, v in batcher.round_batches(local_steps).items()}
-        m = eng.run_round(batches)
+        if runner is not None:
+            rec = runner.run_round()
+            local_curve.append(rec["mean_final_loss"])
+            drift_curve.append(rec["moment_divergence"])
+            stale_err_curve.append(rec["stale_weight_err"])
+        else:
+            batches = {k: jnp.asarray(v)
+                       for k, v in batcher.round_batches(
+                           local_steps,
+                           clients=list(range(n_clients))).items()}
+            m = eng.run_round(batches)
+            local_curve.append(m["mean_final_loss"])
         gp = eng.global_params()
         logits, _ = M.forward(gp, cfg, jnp.asarray(eval_b["tokens"]))
         acc = float((np.asarray(logits[:, -1]).argmax(-1)
                      == eval_b["labels"][:, -1]).mean())
-        local_curve.append(m["mean_final_loss"])
         val_curve.append(float(M.loss_fn(gp, cfg,
                                          {k: jnp.asarray(v)
                                           for k, v in eval_b.items()})))
         acc_curve.append(acc)
-    return {"acc": acc_curve[-1], "acc_curve": acc_curve,
-            "local_curve": local_curve, "val_curve": val_curve}
+    out = {"acc": acc_curve[-1], "acc_curve": acc_curve,
+           "local_curve": local_curve, "val_curve": val_curve}
+    if runner is not None:
+        out["drift_curve"] = drift_curve
+        out["stale_err_curve"] = stale_err_curve
+        out["history"] = runner.history
+    return out
 
 
 def emit(name: str, us_per_call: float, derived: str):

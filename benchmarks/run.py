@@ -21,11 +21,34 @@ import time
 import traceback
 
 
+def _env_hygiene() -> None:
+    """Launcher hygiene, applied BEFORE jax initializes (mirrors the shell
+    block in scripts/ci.sh): tcmalloc preload can't be done from in-process
+    (LD_PRELOAD is read at exec), but the allocator threshold, C++ log
+    level, and XLA host-device plumbing are env-var driven and honored at
+    first jax import."""
+    os.environ.setdefault("TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD",
+                          "60000000000")
+    os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")
+    flags = []
+    host_devices = os.environ.get("REPRO_HOST_DEVICES")
+    if host_devices:
+        flags.append(f"--xla_force_host_platform_device_count={host_devices}")
+    # Opt-in only: rejected by CPU builds of XLA (unknown-flag error).
+    if os.environ.get("REPRO_STEP_MARKERS") == "1":
+        flags.append("--xla_step_marker_location=1")
+    if flags:
+        prev = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (prev + " " + " ".join(flags)).strip()
+
+
 def main() -> None:
+    _env_hygiene()
     from . import (bench_ajive_latency, bench_ajive_recovery, bench_comm,
                    bench_fed_methods, bench_galore_fused, bench_interpolation,
-                   bench_landscape, bench_projector_schedule,
-                   bench_round_e2e, bench_state_mismatch)
+                   bench_landscape, bench_participation,
+                   bench_projector_schedule, bench_round_e2e,
+                   bench_state_mismatch)
 
     print("name,us_per_call,derived")
     suites = [
@@ -39,6 +62,7 @@ def main() -> None:
         ("state_mismatch", bench_state_mismatch.main),
         ("interpolation", bench_interpolation.main),
         ("fed_methods", bench_fed_methods.main),
+        ("participation", bench_participation.main),
     ]
     failures = []
     for name, fn in suites:

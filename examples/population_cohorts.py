@@ -1,0 +1,81 @@
+"""Planet-scale cohorts: a 10⁴-client virtual population with faults.
+
+    PYTHONPATH=src python examples/population_cohorts.py
+
+Each round samples an 8-client cohort out of a 10,000-client population
+(Dirichlet α=0.5 shards), injects dropout and straggler faults, and runs
+the masked fused FedGaLore round. Straggler contributions land 1–2 rounds
+stale through the FedBuff-style buffer; every client's rank-r factored
+state (accumulator R_i + projected moments ṽ_i, O(r(m+n)) per client)
+sticks in a spill-to-disk store — the resident window here is 8 shards of
+512 clients, everything colder lives on disk through the crash-safe
+checkpoint writer. The drift observatory prints the projected-moment
+divergence 𝒮 is absorbing each round.
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core.fed import FedConfig, FedEngine
+from repro.core.population import ParticipationConfig, PopulationRunner
+from repro.data import FederatedBatcher, seq_classification
+from repro.launch.steps import galore_target_fn
+from repro.models import model as M
+
+POPULATION = 10_000
+COHORT = 8
+
+
+def main():
+    cfg = smoke_variant(get_config("qwen1.5-0.5b"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+
+    task = seq_classification(n_examples=2048, n_classes=4, seq_len=16,
+                              vocab=cfg.vocab_size)
+    batcher = FederatedBatcher(task, n_clients=POPULATION, batch_size=8,
+                               alpha=0.5)
+
+    pcfg = ParticipationConfig(population=POPULATION, dropout_rate=0.25,
+                               straggler_rate=0.25, max_staleness=2,
+                               staleness_decay=0.5, seed=17)
+    engine = FedEngine(
+        FedConfig(method="fedgalore", rank=4, lr=3e-3, local_steps=4,
+                  participation=pcfg),
+        loss_fn=lambda p, b: M.loss_fn(p, cfg, b),
+        params=params,
+        target_fn=galore_target_fn(cfg))
+
+    def batches_for(ids, _round):
+        b = batcher.round_batches(4, clients=[int(i) for i in ids])
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    store_dir = tempfile.mkdtemp(prefix="population_store_")
+    runner = PopulationRunner(engine, batches_for, cohort=COHORT, pcfg=pcfg,
+                              store_dir=store_dir, shard_size=512,
+                              max_resident_shards=8)
+
+    eval_b = batcher.eval_batch(256)
+    for rnd in range(8):
+        rec = runner.run_round()
+        logits, _ = M.forward(engine.global_params(), cfg,
+                              jnp.asarray(eval_b["tokens"]))
+        acc = (np.asarray(logits[:, -1]).argmax(-1)
+               == eval_b["labels"][:, -1]).mean()
+        print(f"round {rnd}: cohort={rec['plan'].clients.tolist()} "
+              f"on-time={rec['participants']} dropped={rec['dropped']} "
+              f"straggling={rec['straggling']} buffered={rec['buffered']} "
+              f"stale_merged={rec['stale_merged']} "
+              f"drift={rec['moment_divergence']:.3f} "
+              f"loss={rec['mean_final_loss']:.3f} val_acc={acc:.3f}")
+    runner.store.flush()
+    print(f"store: {runner.store.n_shards} shards of {runner.store.shard_size} "
+          f"clients, {runner.store.resident_bytes() / 2**20:.1f} MiB resident, "
+          f"{runner.store.spills} spills / {runner.store.loads} loads "
+          f"-> {store_dir}")
+
+
+if __name__ == "__main__":
+    main()

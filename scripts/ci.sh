@@ -6,10 +6,40 @@
 #                                      # bench_round_e2e at tiny shapes and
 #                                      # writes BENCH_round_e2e.json at the
 #                                      # repo root (perf trajectory tracking)
+#        scripts/ci.sh --participation-smoke
+#                                      # fault-injection sweep: dropout x
+#                                      # staleness across fedgalore vs the
+#                                      # fedavg-LoRA baseline; writes
+#                                      # BENCH_participation.json and gates
+#                                      # on its acceptance keys
 # Dev-only deps (pytest, hypothesis) are listed in requirements-dev.txt;
 # tests that need hypothesis self-skip when it is absent.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# --- environment hygiene (mirrors benchmarks/run.py:_env_hygiene) ------------
+# tcmalloc, when the image ships it: glibc malloc fragments badly under the
+# round's large donated-buffer churn; the report threshold silences tcmalloc's
+# per-allocation warnings for the multi-GB cohort buffers.
+if [[ -z "${LD_PRELOAD:-}" ]]; then
+    for _tc in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+               /usr/lib/libtcmalloc.so.4; do
+        [[ -f "$_tc" ]] && export LD_PRELOAD="$_tc" && break
+    done
+fi
+export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD="${TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD:-60000000000}"
+# Absl/TF C++ banner noise off by default (keeps pytest/bench output greppable).
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+# REPRO_HOST_DEVICES=N fakes an N-device host platform (multi-device mesh
+# tests and sharded smoke runs on CPU-only hosts).
+if [[ -n "${REPRO_HOST_DEVICES:-}" ]]; then
+    export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=${REPRO_HOST_DEVICES}"
+fi
+# REPRO_STEP_MARKERS=1 adds per-step trace markers for profiles. Opt-in only:
+# the flag is rejected by CPU builds of XLA ("Unknown flags in XLA_FLAGS").
+if [[ "${REPRO_STEP_MARKERS:-0}" == "1" ]]; then
+    export XLA_FLAGS="${XLA_FLAGS:-} --xla_step_marker_location=1"
+fi
 
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     shift
@@ -30,6 +60,30 @@ assert acc["cohort_cmax_within_budget"], (
 assert acc["liftfree_speedup_cmax"] >= 1.0, (
     f"lift-free round slower than transient-lift at C={acc['cohort_cmax']}: "
     f"{acc['liftfree_speedup_cmax']:.2f}x")
+EOF
+    exit 0
+fi
+
+if [[ "${1:-}" == "--participation-smoke" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m \
+        benchmarks.bench_participation --smoke \
+        --out BENCH_participation.json "$@"
+    python - <<'EOF'
+import json
+acc = json.load(open("BENCH_participation.json"))["acceptance"]
+print("participation acceptance:", json.dumps(acc, indent=1))
+# Robustness gates: the masked fused round must be bit-identical to the
+# unmasked round under full participation, drift must stay bounded through
+# the stale-merge path, and fedgalore must degrade no worse than the
+# fedavg-LoRA baseline across the dropout x staleness fault grid.
+assert acc["masked_round_parity"], "full-participation mask != unmasked round"
+assert acc["stale_drift_bounded"], (
+    f"stale aggregation error unbounded: {acc['max_stale_weight_err']:.4f}")
+assert acc["fedgalore_degradation_ok"], (
+    f"fedgalore degrades more than baseline under faults: "
+    f"{acc['fedgalore_worst_degradation']:.4f} vs "
+    f"{acc['baseline_worst_degradation']:.4f} (+tol)")
 EOF
     exit 0
 fi

@@ -4,12 +4,22 @@ Keys are slash-joined tree paths, values are host numpy arrays; restore
 rebuilds against a template pytree (so NamedTuple states and dtypes are
 preserved) and can re-shard onto a mesh via ``jax.device_put`` with the
 template's shardings.
+
+Crash safety: both the npz payload and the JSON manifest are written to a
+temp file and moved into place with ``os.replace`` (atomic on POSIX), so a
+writer killed mid-save leaves either the previous complete checkpoint or a
+stray ``*.tmp*`` file — never a half-written payload under the final name.
+``latest_step`` additionally validates each candidate payload (zip central
+directory + per-member CRC) and skips truncated or missing ones, so a
+client-state store interrupted mid-spill falls back to the last good step
+instead of crashing the run.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
+import zipfile
 from typing import Any, Optional
 
 import jax
@@ -32,6 +42,21 @@ def _flatten(tree):
     return out
 
 
+def _payload_valid(path: str) -> bool:
+    """Whether an npz payload is present and structurally complete (zip
+    central directory readable, every member's CRC checks out). A truncated
+    write — e.g. a spill interrupted by a crash before ``os.replace`` of a
+    *previous* format, or a copy cut short — fails here instead of blowing
+    up inside ``np.load`` at restore time."""
+    if not os.path.isfile(path):
+        return False
+    try:
+        with zipfile.ZipFile(path) as zf:
+            return zf.testzip() is None and len(zf.namelist()) >= 0
+    except (zipfile.BadZipFile, OSError, EOFError):
+        return False
+
+
 def save(directory: str, step: int, tree: PyTree, name: str = "ckpt") -> str:
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
@@ -41,14 +66,21 @@ def save(directory: str, step: int, tree: PyTree, name: str = "ckpt") -> str:
     os.replace(tmp, path)
     manifest = {"step": step, "keys": sorted(flat),
                 "shapes": {k: list(v.shape) for k, v in flat.items()}}
-    with open(os.path.join(directory, f"{name}_{step:08d}.json"), "w") as f:
+    mpath = os.path.join(directory, f"{name}_{step:08d}.json")
+    mtmp = mpath + ".tmp"
+    with open(mtmp, "w") as f:
         json.dump(manifest, f)
+    os.replace(mtmp, mpath)
     return path
 
 
 def restore(directory: str, step: int, template: PyTree,
             name: str = "ckpt") -> PyTree:
     path = os.path.join(directory, f"{name}_{step:08d}.npz")
+    if not _payload_valid(path):
+        raise FileNotFoundError(
+            f"checkpoint payload missing or truncated: {path} "
+            f"(use latest_step() to locate the last complete step)")
     data = np.load(path)
     leaves = jax.tree_util.tree_flatten_with_path(template)
     paths, treedef = leaves[0], leaves[1]
@@ -67,11 +99,14 @@ def restore(directory: str, step: int, template: PyTree,
 
 
 def latest_step(directory: str, name: str = "ckpt") -> Optional[int]:
+    """Largest step with a *complete* payload; steps whose npz is missing or
+    truncated (a crash between manifest and payload, or mid-payload under a
+    non-atomic writer) are skipped."""
     if not os.path.isdir(directory):
         return None
     steps = []
     for f in os.listdir(directory):
         m = re.fullmatch(rf"{name}_(\d+)\.npz", f)
-        if m:
+        if m and _payload_valid(os.path.join(directory, f)):
             steps.append(int(m.group(1)))
     return max(steps) if steps else None

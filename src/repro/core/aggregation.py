@@ -62,8 +62,9 @@ def lift_average(stacked_adapters: PyTree, weights, scale: float = 1.0) -> PyTre
     def agg(ad):
         if ad is None:
             return None
-        # einsum over client axis: Σ_k w_k B_k A_k, never materializing all K lifts.
-        return scale * jnp.einsum("k,kmr,krn->mn", w,
+        # einsum over client axis: Σ_k w_k B_k A_k, never materializing all K
+        # lifts; the ellipsis carries stacked (nb, ·, ·) scan-block leaves.
+        return scale * jnp.einsum("k,k...mr,k...rn->...mn", w,
                                   ad.b.astype(jnp.float32),
                                   ad.a.astype(jnp.float32))
 
@@ -76,20 +77,23 @@ def lora_fair_refine(stacked_adapters: PyTree, weights, scale: float = 1.0,
                      ridge: float = 1e-6) -> PyTree:
     """LoRA-Fair: factor averaging followed by a server-side refinement of B̄
     toward the true mean lift:  B̄' = argmin_B ||scale·B Ā − ΔW̄_lift||²_F,
-    solved in closed form with a ridge term.
+    solved in closed form with a ridge term (batched over stacked
+    scan-block leading dims).
     """
     w = _norm_weights(weights)
+    swap = lambda x: jnp.swapaxes(x, -1, -2)
 
     def agg(ad):
         if ad is None:
             return None
-        a_bar = _wavg(ad.a, w).astype(jnp.float32)             # (r, n)
-        mean_lift = jnp.einsum("k,kmr,krn->mn", w,
+        a_bar = _wavg(ad.a, w).astype(jnp.float32)             # (..., r, n)
+        mean_lift = jnp.einsum("k,k...mr,k...rn->...mn", w,
                                ad.b.astype(jnp.float32),
-                               ad.a.astype(jnp.float32))        # (m, n)
-        r = a_bar.shape[0]
-        gram = a_bar @ a_bar.T + ridge * jnp.eye(r, dtype=jnp.float32)
-        b_ref = jnp.linalg.solve(gram, (a_bar @ mean_lift.T)).T / max(scale, 1e-12)
+                               ad.a.astype(jnp.float32))        # (..., m, n)
+        r = a_bar.shape[-2]
+        gram = a_bar @ swap(a_bar) + ridge * jnp.eye(r, dtype=jnp.float32)
+        b_ref = swap(jnp.linalg.solve(gram, a_bar @ swap(mean_lift))) \
+            / max(scale, 1e-12)
         return LoraPair(a=a_bar.astype(ad.a.dtype), b=b_ref.astype(ad.b.dtype))
 
     return jax.tree_util.tree_map(

@@ -240,9 +240,25 @@ def _factored_joint_scores(scores: jnp.ndarray, joint_rank: int):
     return scores @ (w * _inv_sqrt_rank_safe(lam)[None, :])
 
 
+def _participation_mask(weights: Optional[jnp.ndarray],
+                        exclude_zero_weights: bool) -> Optional[jnp.ndarray]:
+    """Per-client {0,1} mask derived from zero aggregation weights.
+
+    Zero weights remove a client from the final weighted joint estimate, but
+    Phases 1–2 are *unweighted*: a dropped client's scores would still shape
+    the joint basis. With ``exclude_zero_weights`` the mask zeroes the
+    dropped clients' score columns before the joint-basis Gram, so zeroed
+    columns contribute zero eigenvalues and the joint basis is built from
+    participants only (the participation-masked round's 𝒮 semantics)."""
+    if not exclude_zero_weights or weights is None:
+        return None
+    return (jnp.asarray(weights, jnp.float32) > 0).astype(jnp.float32)
+
+
 def ajive_sync_factored(v_stack: jnp.ndarray, rank: int,
                         weights: Optional[jnp.ndarray] = None,
-                        side: str = "right") -> jnp.ndarray:
+                        side: str = "right",
+                        exclude_zero_weights: bool = False) -> jnp.ndarray:
     """Server-side second-moment sync on *projected* moments (Alg. 1 l.12).
 
     The lifted view of client i is ``V^i = ṽ^i Bᵀ`` (right blocks) or
@@ -269,16 +285,24 @@ def ajive_sync_factored(v_stack: jnp.ndarray, rank: int,
     implementation; here the numerically-null eigendirections are zeroed
     (rank-revealing floor) where the dense SVD would return arbitrary noise
     directions — graceful degradation, but not bit-parity.
+
+    ``exclude_zero_weights`` additionally masks the Phase-1 score columns of
+    zero-weight clients (see :func:`_participation_mask`): the joint basis
+    is then estimated from participating clients only — the semantics of
+    the participation-masked round, where a dropped client's local state
+    must not influence the server filter at all.
     """
     if v_stack.ndim == 4:                          # stacked scan blocks
         return jax.vmap(
-            lambda vs: ajive_sync_factored(vs, rank, weights, side),
+            lambda vs: ajive_sync_factored(vs, rank, weights, side,
+                                           exclude_zero_weights),
             in_axes=1, out_axes=0)(v_stack)
 
     a = v_stack.astype(jnp.float32)                # (C, m, r) | (C, r, n)
     c_views = a.shape[0]
     r = a.shape[-1] if side == "right" else a.shape[-2]
     k = min(rank, r)
+    mask = _participation_mask(weights, exclude_zero_weights)
 
     if side == "right":
         # Phase 1: per-view economy SVD via the r×r Gram of ṽ^i.
@@ -286,6 +310,8 @@ def ajive_sync_factored(v_stack: jnp.ndarray, rank: int,
         lam, wv = jax.vmap(lambda g: _topk_eig_desc(g, k))(gram)
         scores = jnp.einsum("cmr,crk->cmk", a, wv)         # ṽ W
         scores = scores * _inv_sqrt_rank_safe(lam)[:, None, :]
+        if mask is not None:
+            scores = scores * mask[:, None, None]
         stacked = jnp.moveaxis(scores, 0, 1).reshape(a.shape[1], c_views * k)
         u_joint = _factored_joint_scores(stacked, k)       # (m, k)
         joint = jnp.einsum("mj,cjr->cmr", u_joint,
@@ -296,6 +322,8 @@ def ajive_sync_factored(v_stack: jnp.ndarray, rank: int,
         # the r-dimensional coefficient space.
         gram = jnp.einsum("crn,csn->crs", a, a)            # (C, r, r)
         _, wv = jax.vmap(lambda g: _topk_eig_desc(g, k))(gram)
+        if mask is not None:
+            wv = wv * mask[:, None, None]
         stacked = jnp.moveaxis(wv, 0, 1).reshape(r, c_views * k)
         q = _factored_joint_scores(stacked, k)             # (r, k)
         joint = jnp.einsum("rj,cjn->crn", q,
@@ -308,7 +336,9 @@ def ajive_sync_factored(v_stack: jnp.ndarray, rank: int,
 def ajive_sync_hetero_factored(v_stack: jnp.ndarray, b_stack: jnp.ndarray,
                                rank: int,
                                weights: Optional[jnp.ndarray] = None,
-                               side: str = "right") -> jnp.ndarray:
+                               side: str = "right",
+                               exclude_zero_weights: bool = False
+                               ) -> jnp.ndarray:
     """Factored AJIVE 𝒮 for **heterogeneous client bases** (adaptive round 0).
 
     Client i lifted its ṽ with its *own* orthonormal basis ``Q_i``; the dense
@@ -332,12 +362,15 @@ def ajive_sync_hetero_factored(v_stack: jnp.ndarray, b_stack: jnp.ndarray,
     shape, expressed on the client-0 basis (matching the dense per-client
     lift oracle to fp32 precision on full-rank inputs). No ``(C, m, n)``
     view, ``(n, n)`` projector, or dense broadcast is ever formed. Stacked
-    scan blocks (C, nb, ·, r) vmap over nb.
+    scan blocks (C, nb, ·, r) vmap over nb. ``exclude_zero_weights`` masks
+    zero-weight clients' score columns out of the joint-basis estimate (see
+    :func:`ajive_sync_factored`).
     """
     if v_stack.ndim == 4:                          # stacked scan blocks
         return jax.vmap(
             lambda vs, bs: ajive_sync_hetero_factored(vs, bs, rank, weights,
-                                                      side),
+                                                      side,
+                                                      exclude_zero_weights),
             in_axes=1, out_axes=0)(v_stack, b_stack)
 
     a = v_stack.astype(jnp.float32)                # (C, m, r) | (C, r, n)
@@ -345,12 +378,15 @@ def ajive_sync_hetero_factored(v_stack: jnp.ndarray, b_stack: jnp.ndarray,
     c_views = a.shape[0]
     r = a.shape[-1] if side == "right" else a.shape[-2]
     k = min(rank, r)
+    mask = _participation_mask(weights, exclude_zero_weights)
 
     if side == "right":
         gram = jnp.einsum("cmr,cms->crs", a, a)            # (C, r, r)
         lam, wv = jax.vmap(lambda g: _topk_eig_desc(g, k))(gram)
         scores = jnp.einsum("cmr,crk->cmk", a, wv)
         scores = scores * _inv_sqrt_rank_safe(lam)[:, None, :]
+        if mask is not None:
+            scores = scores * mask[:, None, None]
         stacked = jnp.moveaxis(scores, 0, 1).reshape(a.shape[1], c_views * k)
         u_joint = _factored_joint_scores(stacked, k)       # (m, k)
         joint = jnp.einsum("mj,cjr->cmr", u_joint,
@@ -361,6 +397,8 @@ def ajive_sync_hetero_factored(v_stack: jnp.ndarray, b_stack: jnp.ndarray,
         gram = jnp.einsum("crn,csn->crs", a, a)            # (C, r, r)
         _, wv = jax.vmap(lambda g: _topk_eig_desc(g, k))(gram)
         scores = jnp.einsum("cdr,crk->cdk", b, wv)         # Q_i u^i, skinny
+        if mask is not None:
+            scores = scores * mask[:, None, None]
         stacked = jnp.moveaxis(scores, 0, 1).reshape(b.shape[1], c_views * k)
         u_joint = _factored_joint_scores(stacked, k)       # (dim, k)
         t0 = jnp.einsum("dr,dk->rk", b[0], u_joint)        # Q_0ᵀ U

@@ -67,12 +67,14 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import aggregation as agg
 from . import galore as gal
 from . import lora as lora_lib
 from . import projector as proj
 from . import state_sync as sync_lib
+from .population import ParticipationConfig
 from .. import optim as optim_lib
 from ..optim.base import apply_updates
 
@@ -150,6 +152,19 @@ class FedConfig:
     # refresh needs dense gradients). False keeps PR 4's transient-lift
     # read everywhere — the lift-free parity oracle.
     lift_free: bool = True
+    # Planet-scale participation (core.population module docstring): seeded
+    # per-round cohort sampling out of a large virtual client population,
+    # plus per-client dropout and straggler-delay fault injection. The
+    # compiled round keeps its fixed (C, ·, r) shapes — dropped/straggling
+    # clients are masked via :meth:`FedEngine.run_round`'s ``mask`` argument
+    # (zero effective weight + AJIVE score exclusion), and straggler updates
+    # land k rounds late through ``population.StalenessBuffer`` with
+    # ``staleness_decay**delay`` weights. None disables the layer: every
+    # round is the always-on full-cohort round (bit-identical to the
+    # pre-participation engine). Orchestrated by
+    # ``population.PopulationRunner``; the engine itself only consumes the
+    # per-round masks.
+    participation: Optional[ParticipationConfig] = None
 
 
 # ------------------------------------------------------------ trainables ----
@@ -210,6 +225,10 @@ class FedEngine:
             self.global_trainable = lora_lib.tree_lora_init(
                 key, params, self.target_fn, cfg.rank)
             self.frozen = params   # LoRA: base stays whole, delta is additive
+        if not jax.tree_util.tree_leaves(self.global_trainable):
+            raise ValueError(
+                f"target_fn selected no trainable leaves for method "
+                f"'{cfg.method}' — nothing to train or aggregate")
 
         self.galore_cfg = gal.GaloreConfig(
             rank=cfg.rank, refresh_every=10 ** 9,   # engine refreshes manually
@@ -251,6 +270,14 @@ class FedEngine:
         self._client_opt = None
         self._round_jit = None
         self._rounds_scan_jit = None
+        # Participation-masked variants: same round math on renormalized
+        # masked weights, with zero-weight clients additionally excluded
+        # from the AJIVE joint-basis estimate. Kept as SEPARATE compiled
+        # programs so the unmasked round stays byte-for-byte the program it
+        # was before the participation layer existed (full-participation
+        # masks short-circuit onto it — bit-identical by construction).
+        self._round_masked_jit = None
+        self._rounds_scan_masked_jit = None
 
     # ----------------------------------------------------------- optimizer --
     def _make_tx(self):
@@ -333,21 +360,63 @@ class FedEngine:
     def _normalize_weights(self, weights, k_clients):
         return sync_lib.normalize_weights(weights, k_clients)
 
-    def run_round(self, client_batches: PyTree, weights=None):
+    def _masked_weights(self, weights, mask, k_clients):
+        """Effective weights of a participation-masked round: the base
+        weights with dropped clients zeroed, renormalized over the
+        participants — eagerly, so the masked round is exactly the original
+        round reweighted onto the participating subset."""
+        w = np.asarray(self._normalize_weights(weights, k_clients))
+        wm = np.where(np.asarray(mask, bool), w, 0.0)
+        s = float(wm.sum())
+        if s <= 0.0:
+            raise ValueError("participation mask drops every client in the "
+                             "cohort — a round needs >= 1 on-time participant")
+        return jnp.asarray(wm / s, jnp.float32)
+
+    @staticmethod
+    def _canon_mask(mask, k_clients):
+        """None | all-true masks collapse to None: full participation runs
+        the pre-participation program on the pre-participation inputs
+        (bit-identity is by construction, not by numerics)."""
+        if mask is None:
+            return None
+        m = np.asarray(mask, bool).reshape(-1)
+        if m.shape != (k_clients,):
+            raise ValueError(f"mask shape {m.shape} != cohort ({k_clients},)")
+        return None if m.all() else m
+
+    def run_round(self, client_batches: PyTree, weights=None, mask=None):
         """client_batches: pytree with leading axes (K clients, T steps, ...).
 
         Returns dict of metrics. Mutates engine global state. Default: the
         whole-round fused program (one dispatch, donated client buffers);
         ``fused_round=False`` or ``factored_sync=False`` runs the eager
         stage-by-stage reference round.
+
+        ``mask`` (optional bool (K,)) marks this round's on-time
+        participants: masked-out clients still occupy their compiled cohort
+        slot (shapes never change) but carry zero effective weight in 𝒜 and
+        are excluded from the AJIVE joint basis in 𝒮. A full-participation
+        mask short-circuits onto the unmasked program — bit-identical to
+        calling without a mask. The eager reference round applies the
+        weight masking only (no score exclusion — it predates the
+        participation layer and stays the unmasked oracle).
         """
         k_clients = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
-        w = self._normalize_weights(weights, k_clients)
+        mask = self._canon_mask(mask, k_clients)
         if not (self.cfg.fused_round and self.cfg.factored_sync):
+            w = (self._normalize_weights(weights, k_clients) if mask is None
+                 else self._masked_weights(weights, mask, k_clients))
             return self._run_round_eager(client_batches, w, k_clients)
 
+        if mask is None:
+            w = self._normalize_weights(weights, k_clients)
+            round_fn = self._round_jitted()
+        else:
+            w = self._masked_weights(weights, mask, k_clients)
+            round_fn = self._round_masked_jitted()
         self._ensure_client_buffers(k_clients)
-        out = self._round_jitted()(
+        out = round_fn(
             self._client_state, self._client_opt, self.global_trainable,
             self.frozen, self.synced_v,
             jnp.asarray(self.round_idx, jnp.int32), client_batches, w)
@@ -361,7 +430,7 @@ class FedEngine:
         return {"local_loss": losses,                      # (K, T)
                 "mean_final_loss": float(jnp.mean(losses[:, -1]))}
 
-    def run_rounds(self, round_batches: PyTree, weights=None):
+    def run_rounds(self, round_batches: PyTree, weights=None, masks=None):
         """K rounds as ONE dispatch: ``lax.scan`` over the fused round.
 
         round_batches: pytree with leading (K rounds, C clients, T steps, ...)
@@ -369,46 +438,47 @@ class FedEngine:
         engine global state exactly as K successive :meth:`run_round` calls
         (modulo the eager round-0 dense-𝒮 oracle, replaced by the
         heterogeneous-basis factored sync).
+
+        ``masks`` (optional bool (K rounds, C)) applies a per-round
+        participation mask: the per-round effective weights are renormalized
+        eagerly (pure host function of the masks — reproducible between this
+        scan driver and K :meth:`run_round` calls) and ride the scan as xs.
+        All-true masks short-circuit onto the unmasked scan program.
+        Staleness is NOT expressible inside the scan (stale merges mutate
+        the carry between rounds on the host) — ``population.
+        PopulationRunner`` falls back to sequential rounds when a staleness
+        buffer is active.
         """
         leading = jax.tree_util.tree_leaves(round_batches)[0].shape
         k_rounds, k_clients = leading[0], leading[1]
-        w = self._normalize_weights(weights, k_clients)
+        if masks is not None:
+            masks = np.asarray(masks, bool)
+            if masks.shape != (int(k_rounds), int(k_clients)):
+                raise ValueError(f"masks shape {masks.shape} != "
+                                 f"({k_rounds}, {k_clients})")
+            if masks.all():
+                masks = None
         if not (self.cfg.fused_round and self.cfg.factored_sync):
             # Honor the eager/oracle configuration: K sequential reference
             # rounds (keeps dense-𝒮 oracle comparisons driven through
             # run_rounds honest instead of silently going factored).
             losses = jnp.stack([
-                self._run_round_eager(
+                self.run_round(
                     jax.tree_util.tree_map(lambda x, r=r: x[r],
                                            round_batches),
-                    w, k_clients)["local_loss"]
+                    weights,
+                    None if masks is None else masks[r])["local_loss"]
                 for r in range(int(k_rounds))])
             return {"local_loss": losses,
                     "mean_final_loss": float(jnp.mean(losses[-1, :, -1]))}
-        if self._rounds_scan_jit is None:
-            frozen_mutates = self._frozen_mutates()
-
-            def scan_rounds(global_tr, frozen, synced_v, round_idx,
-                            batches, w):
-                # frozen rides in the carry only for the lift aggregations
-                # that rewrite it; otherwise it is scan-invariant (closed
-                # over by the body — no per-iteration copy).
-                def body(carry, round_b):
-                    if frozen_mutates:
-                        g_tr, fz, sv, ridx = carry
-                    else:
-                        (g_tr, sv, ridx), fz = carry, frozen
-                    _, _, g_tr, fz, sv, losses = self._round_core(
-                        g_tr, fz, sv, ridx, round_b, w)
-                    new_carry = ((g_tr, fz, sv, ridx + 1) if frozen_mutates
-                                 else (g_tr, sv, ridx + 1))
-                    return new_carry, losses
-                carry0 = ((global_tr, frozen, synced_v, round_idx)
-                          if frozen_mutates
-                          else (global_tr, synced_v, round_idx))
-                carry, losses = jax.lax.scan(body, carry0, batches)
-                return carry, losses
-            self._rounds_scan_jit = jax.jit(scan_rounds)
+        if masks is None:
+            w = self._normalize_weights(weights, k_clients)
+            scan_fn = self._rounds_scan_jitted()
+        else:
+            # Per-round effective weights as scan xs; exclusion-aware 𝒮.
+            w = jnp.stack([self._masked_weights(weights, m, k_clients)
+                           for m in masks])
+            scan_fn = self._rounds_scan_masked_jitted()
 
         synced_v = self.synced_v
         if synced_v is None and self._method_syncs():
@@ -416,7 +486,7 @@ class FedEngine:
             # synced state" (fresh moments are zero and the install clamps
             # at zero), so round 0 inside the scan matches run_round.
             synced_v = self._zero_synced_template()
-        carry, losses = self._rounds_scan_jit(
+        carry, losses = scan_fn(
             self.global_trainable, self.frozen, synced_v,
             jnp.asarray(self.round_idx, jnp.int32), round_batches, w)
         if self._frozen_mutates():
@@ -428,6 +498,49 @@ class FedEngine:
         self.round_idx += int(k_rounds)
         return {"local_loss": losses,                      # (K, C, T)
                 "mean_final_loss": float(jnp.mean(losses[-1, :, -1]))}
+
+    def _build_rounds_scan(self, exclude_zero: bool):
+        """jit a scan-over-rounds driver. Unmasked: one weight vector closed
+        into every round (scan-invariant). Masked (``exclude_zero``): one
+        effective weight vector per round rides the xs, and 𝒮 excludes
+        zero-weight clients from the joint-basis estimate."""
+        frozen_mutates = self._frozen_mutates()
+
+        def scan_rounds(global_tr, frozen, synced_v, round_idx, batches, w):
+            # frozen rides in the carry only for the lift aggregations
+            # that rewrite it; otherwise it is scan-invariant (closed
+            # over by the body — no per-iteration copy).
+            def body(carry, xs):
+                round_b, w_r = xs if exclude_zero else (xs, w)
+                if frozen_mutates:
+                    g_tr, fz, sv, ridx = carry
+                else:
+                    (g_tr, sv, ridx), fz = carry, frozen
+                _, _, g_tr, fz, sv, losses = self._round_core(
+                    g_tr, fz, sv, ridx, round_b, w_r,
+                    exclude_zero=exclude_zero)
+                new_carry = ((g_tr, fz, sv, ridx + 1) if frozen_mutates
+                             else (g_tr, sv, ridx + 1))
+                return new_carry, losses
+            carry0 = ((global_tr, frozen, synced_v, round_idx)
+                      if frozen_mutates
+                      else (global_tr, synced_v, round_idx))
+            xs = (batches, w) if exclude_zero else batches
+            carry, losses = jax.lax.scan(body, carry0, xs)
+            return carry, losses
+        return jax.jit(scan_rounds)
+
+    def _rounds_scan_jitted(self):
+        if self._rounds_scan_jit is None:
+            self._rounds_scan_jit = self._build_rounds_scan(
+                exclude_zero=False)
+        return self._rounds_scan_jit
+
+    def _rounds_scan_masked_jitted(self):
+        if self._rounds_scan_masked_jit is None:
+            self._rounds_scan_masked_jit = self._build_rounds_scan(
+                exclude_zero=True)
+        return self._rounds_scan_masked_jit
 
     # ------------------------------------------------- fused round program --
     def _method_syncs(self) -> bool:
@@ -582,11 +695,14 @@ class FedEngine:
                                       bases)
 
     def _round_core(self, global_trainable, frozen, synced_v, round_idx,
-                    client_batches, w):
+                    client_batches, w, exclude_zero: bool = False):
         """The whole federated round as a pure function: InitState → T local
         steps (vmapped clients, streamed over cohort chunks) → 𝒜 → factored
         𝒮. Shared by the per-round jitted program and the scan-over-rounds
-        driver.
+        driver. ``exclude_zero`` is the participation-masked variant: w is a
+        masked+renormalized weight vector and 𝒮 drops zero-weight clients
+        from the AJIVE joint basis (𝒜 needs no flag — zero weights already
+        vanish from every weighted reduction).
 
         Chunk streaming: the cohort is reshaped (C, …) → (C/B, B, …) and a
         ``lax.scan`` runs the B-client vmapped local phase per chunk, so the
@@ -651,7 +767,8 @@ class FedEngine:
             out_d, out_opt, losses, scales = stream(local_fn, client_batches)
             new_global = self._aggregate_factored(
                 global_trainable, out_d, out_opt, scales, w, round_idx)
-            new_synced = self._sync_states_pure(out_opt, w, round_idx)
+            new_synced = self._sync_states_pure(out_opt, w, round_idx,
+                                                exclude_zero)
             return out_d, out_opt, new_global, frozen, new_synced, losses
 
         stacked = jax.tree_util.tree_map(
@@ -666,7 +783,8 @@ class FedEngine:
         out_tr, out_opt, losses = stream(local_fn, client_batches)
         new_global, new_frozen = self._aggregate_pure(out_tr, w, frozen,
                                                       round_idx)
-        new_synced = self._sync_states_pure(out_opt, w, round_idx)
+        new_synced = self._sync_states_pure(out_opt, w, round_idx,
+                                            exclude_zero)
         return out_tr, out_opt, new_global, new_frozen, new_synced, losses
 
     def _stack_deltas0(self, st0, n: int):
@@ -682,24 +800,36 @@ class FedEngine:
         (an undonated output would memcpy the whole base every round)."""
         return self.spec.aggregation in ("lift_merge", "lift_refac")
 
+    def _build_round_jit(self, exclude_zero: bool):
+        frozen_mutates = self._frozen_mutates()
+
+        def round_fn(client_tr, client_opt, global_trainable, frozen,
+                     synced_v, round_idx, client_batches, w):
+            # client_tr/client_opt are donated carries: their values are
+            # never read (InitState rebuilds both), only their buffers
+            # are reused for this round's stacked outputs.
+            del client_tr, client_opt
+            out = self._round_core(global_trainable, frozen, synced_v,
+                                   round_idx, client_batches, w,
+                                   exclude_zero=exclude_zero)
+            if frozen_mutates:
+                return out
+            out_tr, out_opt, new_global, _, new_synced, losses = out
+            return out_tr, out_opt, new_global, new_synced, losses
+        return jax.jit(round_fn, donate_argnums=(0, 1))
+
     def _round_jitted(self):
         if self._round_jit is None:
-            frozen_mutates = self._frozen_mutates()
-
-            def round_fn(client_tr, client_opt, global_trainable, frozen,
-                         synced_v, round_idx, client_batches, w):
-                # client_tr/client_opt are donated carries: their values are
-                # never read (InitState rebuilds both), only their buffers
-                # are reused for this round's stacked outputs.
-                del client_tr, client_opt
-                out = self._round_core(global_trainable, frozen, synced_v,
-                                       round_idx, client_batches, w)
-                if frozen_mutates:
-                    return out
-                out_tr, out_opt, new_global, _, new_synced, losses = out
-                return out_tr, out_opt, new_global, new_synced, losses
-            self._round_jit = jax.jit(round_fn, donate_argnums=(0, 1))
+            self._round_jit = self._build_round_jit(exclude_zero=False)
         return self._round_jit
+
+    def _round_masked_jitted(self):
+        """The participation-masked round program: identical math on the
+        masked+renormalized weights, plus AJIVE score exclusion in 𝒮.
+        Compiled separately so the unmasked program never changes."""
+        if self._round_masked_jit is None:
+            self._round_masked_jit = self._build_round_jit(exclude_zero=True)
+        return self._round_masked_jit
 
     def _run_round_eager(self, client_batches, w, k_clients):
         """Stage-by-stage reference round (the parity oracle): separately
@@ -804,13 +934,15 @@ class FedEngine:
             synced.append(block_fn(v_stack, b_stack, side, rank))
         return jax.tree_util.tree_unflatten(treedef, synced)
 
-    def _sync_states_pure(self, stacked_opt_states, w, round_idx):
+    def _sync_states_pure(self, stacked_opt_states, w, round_idx,
+                          exclude_zero: bool = False):
         """Factored 𝒮 for the fused round: shared-basis rounds synchronize on
         the projected ṽ directly (no lift); the adaptive round-0 diverged-
         basis case runs the heterogeneous-basis factored sync (r×r transfer
         Grams) — the dense (K, m, n) per-client lift never executes. The
         round-0 branch is a ``lax.cond`` so one compiled program serves the
-        whole scanned sweep."""
+        whole scanned sweep. ``exclude_zero`` (the participation-masked
+        round) drops zero-weight clients from the AJIVE joint basis."""
         if not self._method_syncs():
             return None
         protocol = self.spec.state_sync
@@ -825,11 +957,13 @@ class FedEngine:
                 # stays on the round-k basis; manual_refresh applies the
                 # next-round transfer at InitState.
                 return sync_lib.sync_block_synced_factored(
-                    protocol, v_stack, side, w, rank)
+                    protocol, v_stack, side, w, rank,
+                    exclude_zero_weights=exclude_zero)
 
             def hetero(_):
                 return sync_lib.sync_block_hetero_factored(
-                    protocol, v_stack, b_stack, side, w, rank)
+                    protocol, v_stack, b_stack, side, w, rank,
+                    exclude_zero_weights=exclude_zero)
 
             if not round0_hetero_possible:
                 return shared(None)

@@ -24,15 +24,18 @@ PyTree = Any
 
 
 class LoraPair(NamedTuple):
-    a: jnp.ndarray   # (r, n)
-    b: jnp.ndarray   # (m, r)
+    a: jnp.ndarray   # (..., r, n)
+    b: jnp.ndarray   # (..., m, r)
 
 
 def lora_init(key: jax.Array, shape, rank: int, dtype=jnp.float32,
               a_std: float = 0.02) -> LoraPair:
-    m, n = shape
-    a = a_std * jax.random.normal(key, (rank, n), dtype)
-    b = jnp.zeros((m, rank), dtype)
+    """Adapters for a (m, n) block or a stacked (nb, m, n) scan-block leaf
+    (one adapter per layer, leading dims broadcast through the factor
+    algebra — ``b @ a`` is a batched matmul)."""
+    *lead, m, n = shape
+    a = a_std * jax.random.normal(key, (*lead, rank, n), dtype)
+    b = jnp.zeros((*lead, m, rank), dtype)
     return LoraPair(a=a, b=b)
 
 
@@ -46,15 +49,18 @@ def is_lora_pair(x) -> bool:
 
 def tree_lora_init(key: jax.Array, params: PyTree, target_fn, rank: int,
                    dtype=jnp.float32) -> PyTree:
-    """LoraPair for each 2-D target leaf, None elsewhere."""
+    """LoraPair for each matrix target leaf — plain (m, n) or stacked
+    (nb, m, n) scan-block layout — None elsewhere (mirrors the (2, 3)-D
+    acceptance of ``fed.split_trainable`` so the LoRA baselines adapt the
+    same target modules as the dense/GaLore methods)."""
     leaves = jax.tree_util.tree_flatten_with_path(params)[0]
     treedef = jax.tree_util.tree_structure(params)
     out = []
     for i, (path, p) in enumerate(leaves):
         pstr = "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in path)
-        if p.ndim == 2 and target_fn(pstr, p):
+        if p.ndim in (2, 3) and target_fn(pstr, p):
             out.append(lora_init(jax.random.fold_in(key, i), p.shape,
-                                 min(rank, min(p.shape)), dtype))
+                                 min(rank, min(p.shape[-2:])), dtype))
         else:
             out.append(None)
     return jax.tree_util.tree_unflatten(treedef, out)
@@ -72,19 +78,21 @@ def apply_lora(params: PyTree, adapters: PyTree, scale: float = 1.0) -> PyTree:
 # --------------------------------------------------------------- metrics ----
 
 def rank_tail_energy(delta_w: jnp.ndarray, rank: int) -> jnp.ndarray:
-    """Eckart–Young distance to the rank-≤r manifold (Eq. 10)."""
+    """Eckart–Young distance to the rank-≤r manifold (Eq. 10); batched over
+    any leading dims."""
     s = jnp.linalg.svd(delta_w, compute_uv=False)
-    return jnp.sqrt(jnp.sum(s[rank:] ** 2))
+    return jnp.sqrt(jnp.sum(s[..., rank:] ** 2, axis=-1))
 
 
 def effective_rank(delta_w: jnp.ndarray, tol: float = 1e-6) -> jnp.ndarray:
     s = jnp.linalg.svd(delta_w, compute_uv=False)
-    return jnp.sum(s > tol * s[0])
+    return jnp.sum(s > tol * s[..., :1], axis=-1)
 
 
 def svd_truncate(delta_w: jnp.ndarray, rank: int) -> LoraPair:
     """Re-factorize a dense delta to rank-r LoRA factors (used by FR-LoRA and
-    post-hoc SVD baselines)."""
+    post-hoc SVD baselines); batched over any leading dims."""
     u, s, vt = jnp.linalg.svd(delta_w, full_matrices=False)
-    sq = jnp.sqrt(s[:rank])
-    return LoraPair(a=sq[:, None] * vt[:rank], b=u[:, :rank] * sq[None, :])
+    sq = jnp.sqrt(s[..., :rank])
+    return LoraPair(a=sq[..., :, None] * vt[..., :rank, :],
+                    b=u[..., :, :rank] * sq[..., None, :])

@@ -137,10 +137,17 @@ def sync_block(protocol: str, v_stack: jnp.ndarray, old_basis: jnp.ndarray,
 
 def sync_block_synced_factored(protocol: str, v_stack: jnp.ndarray, side: str,
                                weights=None,
-                               rank: Optional[int] = None
+                               rank: Optional[int] = None,
+                               exclude_zero_weights: bool = False
                                ) -> Optional[jnp.ndarray]:
     """Run protocol 𝒮 in projected coordinates (no lift): returns the synced
-    state expressed on the *round-k* basis, or None for 'none'."""
+    state expressed on the *round-k* basis, or None for 'none'.
+
+    ``exclude_zero_weights`` is the participation-masked round's 𝒮 contract:
+    clients carrying zero aggregation weight (dropped / straggling this
+    round) are excluded from the AJIVE joint-basis estimate, not just from
+    the final weighted mean (averaging protocols exclude them already —
+    zero weights vanish from a weighted mean)."""
     if protocol == "none":
         return None
     if protocol in ("avg", "avg_svd"):
@@ -151,7 +158,8 @@ def sync_block_synced_factored(protocol: str, v_stack: jnp.ndarray, side: str,
     if protocol == "ajive":
         r = rank if rank is not None else (
             v_stack.shape[-1] if side == proj.RIGHT else v_stack.shape[-2])
-        return ajive_sync_factored(v_stack, rank=r, weights=weights, side=side)
+        return ajive_sync_factored(v_stack, rank=r, weights=weights, side=side,
+                                   exclude_zero_weights=exclude_zero_weights)
     raise ValueError(protocol)
 
 
@@ -207,7 +215,8 @@ def _hetero_avg_svd(v32, b32, w, rank, side):
 
 def sync_block_hetero_factored(protocol: str, v_stack: jnp.ndarray,
                                b_stack: jnp.ndarray, side: str, weights=None,
-                               rank: Optional[int] = None
+                               rank: Optional[int] = None,
+                               exclude_zero_weights: bool = False
                                ) -> Optional[jnp.ndarray]:
     """Factored 𝒮 for **heterogeneous client bases** (the adaptive round-0
     case): each client lifted with its own basis, so the shared-basis
@@ -222,7 +231,8 @@ def sync_block_hetero_factored(protocol: str, v_stack: jnp.ndarray,
     if v_stack.ndim == 4:                      # stacked scan blocks (C,nb,·,r)
         return jax.vmap(
             lambda vs, bs: sync_block_hetero_factored(protocol, vs, bs, side,
-                                                      weights, rank),
+                                                      weights, rank,
+                                                      exclude_zero_weights),
             in_axes=1, out_axes=0)(v_stack, b_stack)
     r = b_stack.shape[-1]
     rank = rank if rank is not None else r
@@ -230,7 +240,9 @@ def sync_block_hetero_factored(protocol: str, v_stack: jnp.ndarray,
     b32 = b_stack.astype(jnp.float32)
     w = normalize_weights(weights, v_stack.shape[0])
     if protocol == "ajive":
-        return ajive_sync_hetero_factored(v32, b32, rank, weights, side)
+        return ajive_sync_hetero_factored(
+            v32, b32, rank, weights, side,
+            exclude_zero_weights=exclude_zero_weights)
     if protocol == "avg":
         t = transfer_grams(b32)                            # (C, r, r)
         if side == proj.RIGHT:

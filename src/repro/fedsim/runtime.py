@@ -56,21 +56,36 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ArchConfig
 from ..core import galore as gal
+from ..core import population as pop_lib
 from ..launch import steps as steps_lib
 
 PyTree = Any
 
 
 class ShardedFederation:
+    """``participation`` (a ``core.population.ParticipationConfig``) enables
+    the planet-scale participation layer: :meth:`sample_round_mask` draws the
+    seeded per-round fault plan, and :meth:`run_round` / :meth:`run_rounds`
+    accept per-round participation masks. Masked rounds run a SEPARATELY
+    compiled program — same round math on mask-zeroed weights (the
+    in-program normalization renormalizes over the participants) plus AJIVE
+    joint-basis exclusion of the masked-out clients — so the unmasked
+    program stays byte-for-byte what it was before the participation layer,
+    and an all-true mask short-circuits onto it (bit-identical by
+    construction)."""
+
     def __init__(self, cfg: ArchConfig, spec: steps_lib.TrainSpec, mesh,
                  n_clients: int, state_sync: str = "ajive", seed: int = 0,
                  factored_sync: bool = True, fused_round: bool = True,
                  factored_clients: bool = True,
                  client_chunk: Optional[int] = None,
-                 lift_free: Optional[bool] = None):
+                 lift_free: Optional[bool] = None,
+                 participation: Optional[
+                     pop_lib.ParticipationConfig] = None):
         self.cfg = cfg
         self.spec = spec
         self.mesh = mesh
@@ -78,6 +93,7 @@ class ShardedFederation:
         self.state_sync = state_sync
         self.factored_sync = factored_sync
         self.fused_round = fused_round
+        self.participation = participation
         self.round_idx = 0
 
         if client_chunk is not None:
@@ -106,22 +122,80 @@ class ShardedFederation:
         # program; the stacked buffers are donated so round k+1's outputs
         # reuse round k's memory. state_sync=None lowers the legacy 𝒯𝒜-only
         # program used by the eager reference path.
+        self._step_kwargs = dict(
+            factored_sync=factored_sync, factored_clients=factored_clients,
+            client_chunk=client_chunk, lift_free=lift_free)
         self._round_core = steps_lib.make_fed_round_step(
             cfg, spec, n_clients,
             state_sync=(state_sync if fused_round else None),
-            factored_sync=factored_sync,
-            factored_clients=factored_clients, client_chunk=client_chunk,
-            lift_free=lift_free)
+            **self._step_kwargs)
         self._round = jax.jit(self._round_core,
                               donate_argnums=(0, 2) if fused_round else ())
         self._rounds_scan = None
+        # Participation-masked variants (built lazily — a federation that
+        # never sees a partial mask never compiles them).
+        self._round_masked_core = None
+        self._round_masked = None
+        self._rounds_scan_masked = None
 
-    def run_round(self, batches: PyTree, weights: Optional[jnp.ndarray] = None):
-        """batches: pytree with leading (C, T, b, ...) axes."""
-        w = (jnp.full((self.n_clients,), 1.0 / self.n_clients)
-             if weights is None else weights)
+    # -------------------------------------------------- participation -------
+    def sample_round_mask(self, round_idx: Optional[int] = None) -> np.ndarray:
+        """The seeded on-time participation mask for ``round_idx`` (default:
+        the next round) under this federation's ``participation`` config — a
+        pure host function of (config, round), reproducible across per-round
+        and scanned drivers and across restarts."""
+        if self.participation is None:
+            return np.ones(self.n_clients, bool)
+        r = self.round_idx if round_idx is None else int(round_idx)
+        return pop_lib.sample_cohort(self.participation, self.n_clients, r,
+                                     self.n_clients).mask
+
+    def _canon_mask(self, mask):
+        if mask is None:
+            return None
+        m = np.asarray(mask, bool).reshape(-1)
+        if m.shape != (self.n_clients,):
+            raise ValueError(f"mask shape {m.shape} != cohort "
+                             f"({self.n_clients},)")
+        if not m.any():
+            raise ValueError("participation mask drops every client — a "
+                             "round needs >= 1 on-time participant")
+        return None if m.all() else m
+
+    def _masked_round(self):
+        if self._round_masked is None:
+            self._round_masked_core = steps_lib.make_fed_round_step(
+                self.cfg, self.spec, self.n_clients,
+                state_sync=(self.state_sync if self.fused_round else None),
+                exclude_zero_weights=True, **self._step_kwargs)
+            self._round_masked = jax.jit(
+                self._round_masked_core,
+                donate_argnums=(0, 2) if self.fused_round else ())
+        return self._round_masked
+
+    def _base_weights(self, weights):
+        return (jnp.full((self.n_clients,), 1.0 / self.n_clients)
+                if weights is None else weights)
+
+    def run_round(self, batches: PyTree,
+                  weights: Optional[jnp.ndarray] = None, mask=None):
+        """batches: pytree with leading (C, T, b, ...) axes.
+
+        ``mask`` (optional bool (C,)) marks the round's on-time
+        participants: masked-out clients keep their compiled slot but get
+        zero effective weight (the in-program normalization renormalizes
+        over the participants) and are excluded from the AJIVE joint basis.
+        An all-true mask short-circuits onto the unmasked program —
+        bit-identical to calling without a mask."""
+        mask = self._canon_mask(mask)
+        w = self._base_weights(weights)
+        if mask is None:
+            round_fn = self._round
+        else:
+            round_fn = self._masked_round()
+            w = w * jnp.asarray(mask, w.dtype)
         with self.mesh:
-            new_global, out_states, losses, v_upload = self._round(
+            new_global, out_states, losses, v_upload = round_fn(
                 self.global_trainable, self.frozen, self.opt_states,
                 batches, w)
         self.global_trainable = new_global
@@ -129,17 +203,27 @@ class ShardedFederation:
             # 𝒮 already ran in-mesh; the returned states are next-round-ready.
             self.opt_states = out_states
         else:
-            self.opt_states = self._sync_and_reinit(out_states, v_upload, w)
+            # Unmasked: raw w, exactly the pre-participation call. Masked:
+            # renormalize over participants (mirrors the in-program 𝒜
+            # normalization) and exclude the zero-weight clients from 𝒮.
+            w_sync = w if mask is None else w / jnp.sum(w)
+            self.opt_states = self._sync_and_reinit(
+                out_states, v_upload, w_sync, exclude_zero=mask is not None)
         self.round_idx += 1
         return {"losses": losses,
                 "mean_final_loss": float(jnp.mean(losses[:, -1]))}
 
     def run_rounds(self, batches: PyTree,
-                   weights: Optional[jnp.ndarray] = None):
+                   weights: Optional[jnp.ndarray] = None, masks=None):
         """K rounds as ONE dispatch: ``lax.scan`` over the in-mesh round.
 
         batches: pytree with leading (K rounds, C, T, b, ...) axes. Requires
         the fused round (𝒮 must lower inside the scanned program).
+
+        ``masks`` (optional bool (K, C)) applies per-round participation
+        masks: the per-round mask-zeroed weights ride the scan as xs and the
+        scanned body is the exclusion-aware masked round. All-true masks
+        short-circuit onto the unmasked scan program.
         """
         if not self.fused_round:
             raise ValueError("run_rounds requires fused_round=True: the "
@@ -147,28 +231,57 @@ class ShardedFederation:
                              "and would silently skip 𝒮 inside the scan")
         leading = jax.tree_util.tree_leaves(batches)[0].shape
         k_rounds = leading[0]
-        w = (jnp.full((self.n_clients,), 1.0 / self.n_clients)
-             if weights is None else weights)
-        if self._rounds_scan is None:
-            def scan_rounds(global_trainable, frozen, opt_states, bat, w):
-                def body(carry, round_b):
-                    g_tr, states = carry
-                    g_tr, states, losses, _ = self._round_core(
-                        g_tr, frozen, states, round_b, w)
-                    return (g_tr, states), losses
-                return jax.lax.scan(body, (global_trainable, opt_states),
-                                    bat)
-            self._rounds_scan = jax.jit(scan_rounds, donate_argnums=(0, 2))
+        w = self._base_weights(weights)
+        if masks is not None:
+            masks = np.asarray(masks, bool)
+            if masks.shape != (int(k_rounds), int(self.n_clients)):
+                raise ValueError(f"masks shape {masks.shape} != "
+                                 f"({k_rounds}, {self.n_clients})")
+            if not masks.any(axis=1).all():
+                raise ValueError("a round's participation mask drops every "
+                                 "client")
+            if masks.all():
+                masks = None
+        if masks is None:
+            if self._rounds_scan is None:
+                def scan_rounds(global_trainable, frozen, opt_states, bat, w):
+                    def body(carry, round_b):
+                        g_tr, states = carry
+                        g_tr, states, losses, _ = self._round_core(
+                            g_tr, frozen, states, round_b, w)
+                        return (g_tr, states), losses
+                    return jax.lax.scan(body, (global_trainable, opt_states),
+                                        bat)
+                self._rounds_scan = jax.jit(scan_rounds,
+                                            donate_argnums=(0, 2))
+            scan_fn, w_arg = self._rounds_scan, w
+        else:
+            self._masked_round()     # builds _round_masked_core
+            if self._rounds_scan_masked is None:
+                def scan_rounds_masked(global_trainable, frozen, opt_states,
+                                       bat, w_rounds):
+                    def body(carry, xs):
+                        round_b, w_r = xs
+                        g_tr, states = carry
+                        g_tr, states, losses, _ = self._round_masked_core(
+                            g_tr, frozen, states, round_b, w_r)
+                        return (g_tr, states), losses
+                    return jax.lax.scan(body, (global_trainable, opt_states),
+                                        (bat, w_rounds))
+                self._rounds_scan_masked = jax.jit(scan_rounds_masked,
+                                                   donate_argnums=(0, 2))
+            scan_fn = self._rounds_scan_masked
+            w_arg = jnp.asarray(np.asarray(w)[None] * masks, w.dtype)
         with self.mesh:
             (self.global_trainable, self.opt_states), losses = \
-                self._rounds_scan(self.global_trainable, self.frozen,
-                                  self.opt_states, batches, w)
+                scan_fn(self.global_trainable, self.frozen,
+                        self.opt_states, batches, w_arg)
         self.round_idx += int(k_rounds)
         return {"losses": losses,                          # (K, C, T)
                 "mean_final_loss": float(jnp.mean(losses[-1, :, -1]))}
 
     # ---------------------------------------------- 𝒮 (eager reference) -----
-    def _sync_and_reinit(self, out_states, v_upload, w):
+    def _sync_and_reinit(self, out_states, v_upload, w, exclude_zero=False):
         """Host-side 𝒮 of the legacy round: the same server filter as the
         in-mesh tail of the fused round (`steps.sync_client_states`), run
         eagerly between jit boundaries — the reference the fused round is
@@ -176,7 +289,8 @@ class ShardedFederation:
         del v_upload    # sync_client_states re-extracts from the states
         return steps_lib.sync_client_states(
             out_states, w, self.n_clients, self.state_sync,
-            factored=self.factored_sync, bases_shared=self._bases_shared())
+            factored=self.factored_sync, bases_shared=self._bases_shared(),
+            exclude_zero_weights=exclude_zero)
 
     def _bases_shared(self) -> bool:
         """The shared-basis factored sync requires every client on the

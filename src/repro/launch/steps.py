@@ -182,7 +182,8 @@ def make_fed_local_step(cfg: ArchConfig, spec: TrainSpec,
 
 
 def sync_client_states(out_st, w, n_clients: int, state_sync: str,
-                       factored: bool, bases_shared: bool):
+                       factored: bool, bases_shared: bool,
+                       exclude_zero_weights: bool = False):
     """Server-side 𝒮 + next-round install on client-stacked optimizer states
     (the in-mesh tail of the round program; also usable eagerly).
 
@@ -191,7 +192,10 @@ def sync_client_states(out_st, w, n_clients: int, state_sync: str,
     diverged (``bases_shared=False``), or through the dense per-client lift
     oracle (``factored=False``) — installs the broadcast result in every
     client slot, and bumps the round seed. No dense ``(C, m, n)`` view is
-    built on any factored path.
+    built on any factored path. ``exclude_zero_weights`` (the
+    participation-masked round) additionally drops zero-weight clients from
+    the AJIVE joint-basis estimate — without it they only vanish from the
+    final weighted mean, not from the unweighted joint-subspace phases.
     """
     g_stack = gal.galore_state_of(out_st)
     if state_sync != "none":
@@ -215,13 +219,15 @@ def sync_client_states(out_st, w, n_clients: int, state_sync: str,
                 # seeded basis cancels, so no (C, m, n) lift and no (n, n)
                 # projector. Result is the O(dim·r) projected state.
                 synced = jnp.maximum(sync_lib.sync_block_synced_factored(
-                    state_sync, v_stack, side, w, rank), 0.0)
+                    state_sync, v_stack, side, w, rank,
+                    exclude_zero_weights=exclude_zero_weights), 0.0)
             else:
                 # Diverged bases (data-driven refreshes): the lift → 𝒮 →
                 # re-project round-trip closes over r×r transfer Grams —
                 # the dense per-client lift stays a parity oracle.
                 synced = jnp.maximum(sync_lib.sync_block_hetero_factored(
-                    state_sync, v_stack, b_stack, side, w, rank), 0.0)
+                    state_sync, v_stack, b_stack, side, w, rank,
+                    exclude_zero_weights=exclude_zero_weights), 0.0)
             # every client slot shares the synced projected state (a
             # broadcast view of the O(dim·r) buffer, not a dense tensor)
             out.append(jnp.broadcast_to(synced[None],
@@ -261,7 +267,8 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
                         factored_sync: bool = True,
                         factored_clients: bool = True,
                         client_chunk: Optional[int] = None,
-                        lift_free: Optional[bool] = None) -> Callable:
+                        lift_free: Optional[bool] = None,
+                        exclude_zero_weights: bool = False) -> Callable:
     """A full federated round (Algorithm 1) as one SPMD program:
 
       broadcast (implicit: clients start from the shared global base) →
@@ -284,6 +291,12 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
     ``state_sync=None`` preserves the legacy 𝒯→𝒜 program: raw end-of-round
     states are returned and the caller runs 𝒮 on the host (the eager
     reference path, and the dry-run default).
+    ``exclude_zero_weights`` lowers the participation-masked round variant:
+    the caller feeds pre-masked weights (zero for non-participants — the
+    in-program normalization renormalizes over the participants) and 𝒮
+    drops the zero-weight clients from the AJIVE joint basis. Kept off by
+    default so the unmasked program stays byte-for-byte what it was before
+    the participation layer.
     """
     tx = make_galore_tx(cfg, spec)
     gcfg = make_galore_cfg(spec)
@@ -464,7 +477,8 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
             # an output.
             out_st = sync_client_states(
                 out_st, w, n_clients, state_sync, factored=factored_sync,
-                bases_shared=(spec.refresh_mode != "svd"))
+                bases_shared=(spec.refresh_mode != "svd"),
+                exclude_zero_weights=exclude_zero_weights)
             return new_global, out_st, losses, None
         # 𝒮 payload for the host-side filter: projected second moments ṽ
         # (client-stacked, O(n·r))

@@ -25,6 +25,44 @@ def test_latest_step(tmp_path):
     assert latest_step(str(tmp_path)) == 5
 
 
+def test_save_is_atomic_no_tmp_residue(tmp_path):
+    """The writer stages through tmp files + os.replace: after a completed
+    save, only the final payload + manifest exist (a crash mid-write leaves
+    a stray *.tmp*, never a half-written file under the final name)."""
+    import os
+    save(str(tmp_path), 2, {"x": jnp.ones((3,))})
+    names = sorted(os.listdir(str(tmp_path)))
+    assert names == ["ckpt_00000002.json", "ckpt_00000002.npz"]
+
+
+def test_restore_truncated_payload_raises(tmp_path):
+    """A payload cut short mid-write must fail loudly at restore (not deep
+    inside np.load), pointing at latest_step for recovery."""
+    import os
+    tree = {"x": jnp.arange(4096, dtype=jnp.float32)}
+    path = save(str(tmp_path), 7, tree)
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) // 2)
+    with pytest.raises(FileNotFoundError, match="truncated"):
+        restore(str(tmp_path), 7, tree)
+
+
+def test_latest_step_skips_truncated_and_missing_payloads(tmp_path):
+    """latest_step only reports steps whose payload passes the zip CRC
+    validation: a truncated newest step (crash mid-spill) falls back to the
+    last complete one; a manifest with no payload at all is ignored."""
+    import os
+    tree = {"x": jnp.arange(4096, dtype=jnp.float32)}
+    save(str(tmp_path), 1, tree)
+    p5 = save(str(tmp_path), 5, tree)
+    with open(p5, "r+b") as f:
+        f.truncate(os.path.getsize(p5) // 2)
+    assert latest_step(str(tmp_path)) == 1
+    save(str(tmp_path), 9, tree)
+    os.remove(os.path.join(str(tmp_path), "ckpt_00000009.npz"))
+    assert latest_step(str(tmp_path)) == 1
+
+
 def test_restores_namedtuple_state(tmp_path):
     from repro.core.galore import GaloreConfig, galore_init
     params = {"w": jnp.ones((8, 8))}
