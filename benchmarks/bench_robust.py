@@ -1,0 +1,171 @@
+"""Defense-in-depth sweep: adversarial uplinks x defense stacks.
+
+Drives the guarded fused round through ``core.population.PopulationRunner``
+with seeded adversary plans (up to ~20% of the cohort corrupted per round)
+for the two attack families the paper's robustness appendix injects —
+non-finite shards ('nan') and 100x norm attacks ('scale') — against a
+ladder of defenses: none, in-round quarantine, and quarantine stacked on a
+robust factored aggregator (trimmed mean / geometric median), all in rank-r
+factored coordinates (no dense lift anywhere on the defense path).
+
+Acceptance keys (gated by ``scripts/ci.sh --robust-smoke``):
+  honest_bit_identity          the all-honest guarded run is EXACTLY the
+                               unguarded run (screen no-op, untouched
+                               weights — bit-identity by construction,
+                               checked end-to-end through the eval curves)
+  nan_quarantined              every defended run under the NaN adversary
+                               keeps finite train/val curves and a finite
+                               global model (the screen catches every
+                               poisoned shard in-round)
+  attack_degradation_bounded   for each attack, the best defended cell's
+                               final val loss stays within
+                               ``degradation_bound`` of the honest run,
+                               while the undefended cell degrades strictly
+                               more (or diverges outright)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+from repro.core.population import ParticipationConfig
+
+from .common import emit, run_federated_trial
+
+ATTACKS = ("nan", "scale")
+DEFENSES = {
+    "none": dict(),
+    "quarantine": dict(quarantine=True),
+    "quarantine+trimmed": dict(quarantine=True, robust_agg="trimmed_mean"),
+    "quarantine+geomedian": dict(quarantine=True, robust_agg="geomedian"),
+}
+DEFENDED = tuple(k for k in DEFENSES if k != "none")
+
+# The honest bit-identity cell pins zmax high enough that the *verdict*
+# passes everyone: heterogeneous smoke cohorts can legitimately disperse
+# past the default 6x median norm, and the exactness contract under test is
+# the passing screen's no-op, not the verdict policy.
+HONEST_ZMAX = 1e6
+
+
+def _pcfg(seed, corrupt_rate=0.0, modes=("nan",)):
+    return ParticipationConfig(corrupt_rate=corrupt_rate,
+                               corrupt_modes=modes, attack_scale=100.0,
+                               seed=seed + 100)
+
+
+def _finite(xs):
+    return all(math.isfinite(x) for x in xs)
+
+
+def _cell(attack, defense, *, rounds, n_clients, seed, corrupt_rate):
+    r = run_federated_trial(
+        "fedgalore", alpha=0.5, rounds=rounds, n_clients=n_clients,
+        lr=5e-3, seed=seed,
+        participation=_pcfg(seed, corrupt_rate, (attack,)),
+        **DEFENSES[defense])
+    return {
+        "acc": r["acc"],
+        "acc_curve": r["acc_curve"],
+        "val_curve": r["val_curve"],
+        "local_curve": r["local_curve"],
+        "corrupted_total": int(sum(h["corrupted"] for h in r["history"])),
+        "finite": bool(_finite(r["val_curve"]) and _finite(r["local_curve"])
+                       and _finite(r["drift_curve"])),
+    }
+
+
+def main(smoke=False, rounds=None, n_clients=4, seed=0, out=None,
+         corrupt_rate=0.2, degradation_bound=1.0):
+    rounds = rounds or (4 if smoke else 8)
+    t0 = time.perf_counter()
+
+    # Honest reference + the bit-identity cell: same seeds, same runner
+    # machinery, guarded program on vs off.
+    honest = run_federated_trial("fedgalore", alpha=0.5, rounds=rounds,
+                                 n_clients=n_clients, lr=5e-3, seed=seed,
+                                 participation=_pcfg(seed))
+    honest_guarded = run_federated_trial(
+        "fedgalore", alpha=0.5, rounds=rounds, n_clients=n_clients,
+        lr=5e-3, seed=seed, participation=_pcfg(seed),
+        quarantine=True, quarantine_zmax=HONEST_ZMAX)
+    bit_identity = (honest_guarded["val_curve"] == honest["val_curve"]
+                    and honest_guarded["acc_curve"] == honest["acc_curve"]
+                    and honest_guarded["local_curve"]
+                    == honest["local_curve"])
+
+    grid = {}
+    n_cells = 2
+    for attack in ATTACKS:
+        grid[attack] = {}
+        for defense in DEFENSES:
+            grid[attack][defense] = _cell(
+                attack, defense, rounds=rounds, n_clients=n_clients,
+                seed=seed, corrupt_rate=corrupt_rate)
+            n_cells += 1
+
+    # -- acceptance ---------------------------------------------------------
+    honest_val = honest["val_curve"][-1]
+    attacks_landed = all(
+        c["corrupted_total"] > 0 for a in ATTACKS
+        for c in grid[a].values())
+    nan_ok = all(grid["nan"][d]["finite"] for d in DEFENDED)
+
+    def _deg(cell):
+        if not cell["finite"]:
+            return float("inf")
+        return cell["val_curve"][-1] - honest_val
+
+    degradation = {a: {d: _deg(grid[a][d]) for d in DEFENSES}
+                   for a in ATTACKS}
+    bounded = {}
+    for a in ATTACKS:
+        best = min(degradation[a][d] for d in DEFENDED)
+        undefended = degradation[a]["none"]
+        bounded[a] = bool(best <= degradation_bound and undefended > best)
+    acceptance = {
+        "honest_bit_identity": bool(bit_identity),
+        "attacks_landed": bool(attacks_landed),
+        "nan_quarantined": bool(nan_ok and attacks_landed),
+        "attack_degradation_bounded": bool(all(bounded.values())
+                                           and attacks_landed),
+        "degradation_bound": float(degradation_bound),
+        "degradation": {a: {d: (None if math.isinf(v) else float(v))
+                            for d, v in degradation[a].items()}
+                        for a in ATTACKS},
+        "corrupt_rate": float(corrupt_rate),
+    }
+    dt = time.perf_counter() - t0
+    result = {"config": {"rounds": rounds, "n_clients": n_clients,
+                         "seed": seed, "smoke": bool(smoke),
+                         "attacks": list(ATTACKS),
+                         "defenses": list(DEFENSES),
+                         "corrupt_rate": corrupt_rate},
+              "honest": {"acc": honest["acc"],
+                         "val_final": float(honest_val)},
+              "grid": grid,
+              "acceptance": acceptance,
+              "wall_s": dt}
+    best_scale = min(degradation["scale"][d] for d in DEFENDED)
+    emit("robust", dt / max(n_cells, 1) * 1e6,
+         (f"bitid={int(acceptance['honest_bit_identity'])};"
+          f"nan_ok={int(acceptance['nan_quarantined'])};"
+          f"scale_best_deg={best_scale:.3f};"
+          f"bounded={int(acceptance['attack_degradation_bounded'])}"))
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fewer rounds per cell (CI leg)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_robust.json")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    main(smoke=args.smoke, rounds=args.rounds, seed=args.seed, out=args.out)

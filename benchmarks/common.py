@@ -29,7 +29,8 @@ def run_federated_trial(method: str, alpha, *, rounds=8, n_clients=4,
                         local_steps=8, batch=8, seq=16, n_classes=4,
                         examples=512, lr=2e-2, rank=4, seed=0,
                         arch="qwen1.5-0.5b", participation=None,
-                        store_dir=None):
+                        store_dir=None, robust_agg="none", quarantine=False,
+                        quarantine_zmax=6.0):
     """One federated fine-tuning run; returns final eval accuracy + curves.
 
     ``participation`` (a ``core.population.ParticipationConfig``) drives the
@@ -38,7 +39,11 @@ def run_federated_trial(method: str, alpha, *, rounds=8, n_clients=4,
     population, dropout/straggler fault injection, buffered stale
     aggregation, and the per-round drift observatory — the returned dict
     gains ``drift_curve`` (projected-moment divergence) and
-    ``stale_err_curve`` (stale-vs-fresh aggregation error)."""
+    ``stale_err_curve`` (stale-vs-fresh aggregation error). A participation
+    config drawing corrupted clients (``corrupt_rate > 0``) turns the run
+    adversarial: the runner injects the planned attacks into the compiled
+    round, and ``quarantine`` / ``robust_agg`` / ``quarantine_zmax`` select
+    the engine's defenses."""
     cfg = smoke_variant(get_config(arch))
     params = M.init_params(jax.random.PRNGKey(seed), cfg)
     task = seq_classification(examples, n_classes, seq, cfg.vocab_size,
@@ -54,7 +59,9 @@ def run_federated_trial(method: str, alpha, *, rounds=8, n_clients=4,
 
     eng = FedEngine(FedConfig(method=method, rank=rank, lr=lr,
                               local_steps=local_steps, seed=seed,
-                              participation=participation),
+                              participation=participation,
+                              robust_agg=robust_agg, quarantine=quarantine,
+                              quarantine_zmax=quarantine_zmax),
                     loss, params, target_fn=galore_target_fn(cfg))
     runner = None
     if participation is not None:

@@ -12,6 +12,13 @@
 #                                      # fedavg-LoRA baseline; writes
 #                                      # BENCH_participation.json and gates
 #                                      # on its acceptance keys
+#        scripts/ci.sh --robust-smoke  # adversary sweep: NaN/scale attacks
+#                                      # vs quarantine + robust factored
+#                                      # aggregation; writes
+#                                      # BENCH_robust.json and gates on
+#                                      # honest bit-identity, NaN
+#                                      # containment, and bounded attack
+#                                      # degradation
 # Dev-only deps (pytest, hypothesis) are listed in requirements-dev.txt;
 # tests that need hypothesis self-skip when it is absent.
 set -euo pipefail
@@ -84,6 +91,28 @@ assert acc["fedgalore_degradation_ok"], (
     f"fedgalore degrades more than baseline under faults: "
     f"{acc['fedgalore_worst_degradation']:.4f} vs "
     f"{acc['baseline_worst_degradation']:.4f} (+tol)")
+EOF
+    exit 0
+fi
+
+if [[ "${1:-}" == "--robust-smoke" ]]; then
+    shift
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m \
+        benchmarks.bench_robust --smoke --out BENCH_robust.json "$@"
+    python - <<'EOF'
+import json
+acc = json.load(open("BENCH_robust.json"))["acceptance"]
+print("robust acceptance:", json.dumps(acc, indent=1))
+# Defense-in-depth gates: the all-honest guarded round must be bit-identical
+# to the unguarded round, every NaN-adversary run under a defense must stay
+# finite end-to-end, and for each attack the best defended cell must stay
+# within the degradation bound while the undefended cell degrades strictly
+# more (or diverges).
+assert acc["attacks_landed"], "adversary plans drew zero corrupted clients"
+assert acc["honest_bit_identity"], "honest guarded round != unguarded round"
+assert acc["nan_quarantined"], "NaN adversary leaked past the quarantine"
+assert acc["attack_degradation_bounded"], (
+    f"attack degradation unbounded: {json.dumps(acc['degradation'])}")
 EOF
     exit 0
 fi

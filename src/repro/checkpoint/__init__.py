@@ -1,3 +1,3 @@
-from .io import latest_step, restore, save
+from .io import gc_steps, latest_step, restore, save
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "gc_steps"]

@@ -57,7 +57,8 @@ def _payload_valid(path: str) -> bool:
         return False
 
 
-def save(directory: str, step: int, tree: PyTree, name: str = "ckpt") -> str:
+def save(directory: str, step: int, tree: PyTree, name: str = "ckpt",
+         keep_last: Optional[int] = None) -> str:
     os.makedirs(directory, exist_ok=True)
     flat = _flatten(tree)
     path = os.path.join(directory, f"{name}_{step:08d}.npz")
@@ -71,11 +72,41 @@ def save(directory: str, step: int, tree: PyTree, name: str = "ckpt") -> str:
     with open(mtmp, "w") as f:
         json.dump(manifest, f)
     os.replace(mtmp, mpath)
+    if keep_last is not None:
+        gc_steps(directory, name=name, keep_last=keep_last)
     return path
 
 
+def gc_steps(directory: str, name: str = "ckpt", keep_last: int = 1) -> None:
+    """Retention GC: keep only the newest ``keep_last`` steps that have a
+    *valid* payload; everything older is deleted (payload + manifest), and
+    so are steps whose payload is missing or truncated — a dead step can
+    never be restored, so it only wastes disk. Validity is re-checked here
+    rather than trusted from the save order, which guarantees the newest
+    restorable step is never collected even if later saves were interrupted.
+    """
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    if not os.path.isdir(directory):
+        return
+    steps = set()
+    for f in os.listdir(directory):
+        m = re.fullmatch(rf"{name}_(\d+)\.(npz|json)", f)
+        if m:
+            steps.add(int(m.group(1)))
+    valid = [s for s in steps
+             if _payload_valid(os.path.join(directory,
+                                            f"{name}_{s:08d}.npz"))]
+    keep = set(sorted(valid)[-keep_last:])
+    for s in steps - keep:
+        for ext in ("npz", "json", "meta.json"):
+            p = os.path.join(directory, f"{name}_{s:08d}.{ext}")
+            if os.path.isfile(p):
+                os.remove(p)
+
+
 def restore(directory: str, step: int, template: PyTree,
-            name: str = "ckpt") -> PyTree:
+            name: str = "ckpt", reject_nonfinite: bool = True) -> PyTree:
     path = os.path.join(directory, f"{name}_{step:08d}.npz")
     if not _payload_valid(path):
         raise FileNotFoundError(
@@ -88,7 +119,17 @@ def restore(directory: str, step: int, template: PyTree,
     for path_t, leaf in paths:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                        for p in path_t)
-        arr = jnp.asarray(data[key], dtype=leaf.dtype)
+        raw = data[key]
+        if (reject_nonfinite and np.issubdtype(raw.dtype, np.floating)
+                and not np.isfinite(raw).all()):
+            # A shard that passed the zip CRC can still carry NaN/inf (e.g.
+            # truncated-then-padded bytes, or state spilled mid-blowup) —
+            # restoring it would feed poison straight back into the client
+            # state store / federation. Fail loudly instead.
+            raise ValueError(
+                f"checkpoint payload contains non-finite values: {path} "
+                f"(key {key!r}); refusing to restore corrupted state")
+        arr = jnp.asarray(raw, dtype=leaf.dtype)
         if hasattr(leaf, "sharding") and leaf.sharding is not None:
             try:
                 arr = jax.device_put(arr, leaf.sharding)

@@ -155,6 +155,190 @@ def factored_lift_average_hetero(delta_stack: jnp.ndarray,
     return jnp.einsum("k,kmr,krn->mn", w, b32, d32)
 
 
+# ------------------------------------------------- robust factored 𝒜 --------
+#
+# Defense layer against corrupted client uploads (Koo et al.'s robust
+# federated LoRA direction): every operator runs on the rank-r factored
+# (C, ·, r) stacks — (C, nb, ·, r) scan-block leaves included — in
+# O(C·r·(m+n)), never densifying. Client norms are basis-independent
+# (the shared per-round bases are orthonormal, so ‖lift(R, B)‖_F = ‖R‖_F),
+# which is what makes median-norm screening/clipping sound in factored
+# coordinates even across heterogeneous client bases.
+
+ROBUST_MODES = ("none", "norm_clip", "trimmed_mean", "geomedian")
+
+
+def client_sq_norms(stack: jnp.ndarray) -> jnp.ndarray:
+    """Per-client squared Frobenius norms of a (C, ...) stack, fp32, with
+    non-finite entries contributing zero (their clients are flagged by the
+    finiteness screen separately — a NaN must not poison the median)."""
+    s32 = stack.astype(jnp.float32)
+    s32 = jnp.where(jnp.isfinite(s32), s32, 0.0)
+    return jnp.sum(s32 * s32, axis=tuple(range(1, s32.ndim)))
+
+
+def weighted_quantile(x: jnp.ndarray, w: jnp.ndarray, q: float) -> jnp.ndarray:
+    """q-quantile of (C,) values under non-negative weights (zero-weight
+    entries — masked or quarantined clients — are excluded). jit-safe:
+    sort + cumulative weights + searchsorted, no data-dependent shapes."""
+    x32 = jnp.asarray(x, jnp.float32)
+    w32 = jnp.asarray(w, jnp.float32)
+    order = jnp.argsort(x32)
+    cw = jnp.cumsum(w32[order])
+    idx = jnp.searchsorted(cw, q * cw[-1], side="left")
+    return x32[order][jnp.clip(idx, 0, x32.shape[0] - 1)]
+
+
+def median_norm_clip_factors(delta_stack: jnp.ndarray,
+                             weights, eps: float = 1e-12) -> jnp.ndarray:
+    """Per-client clip factors cᵢ = min(1, med/‖Rᵢ‖) against the weighted
+    median client norm — the norm_clip defense: outliers shrink to the
+    median scale, inliers pass through untouched (cᵢ = 1 exactly)."""
+    n = jnp.sqrt(client_sq_norms(delta_stack))
+    med = weighted_quantile(n, jnp.asarray(weights, jnp.float32), 0.5)
+    return jnp.minimum(1.0, med / jnp.maximum(n, eps))
+
+
+def robust_factored_reduce(delta_stack: jnp.ndarray, weights, mode: str, *,
+                           trim: float = 0.2, iters: int = 8,
+                           eps: float = 1e-8) -> jnp.ndarray:
+    """Robust weighted reduction over the client axis of a factored stack:
+    the drop-in replacement for the plain weighted mean inside
+    :func:`factored_lift_average` (weights renormalized internally the same
+    way; zero-weight clients vanish from every mode).
+
+    norm_clip      Σ wᵢ cᵢ Rᵢ with median-norm clip factors cᵢ.
+    trimmed_mean   coordinate-wise weighted trimmed mean: per coordinate,
+                   each sorted client interval of the weight CDF is clipped
+                   to the [trim, 1-trim] window (zero-weight clients carry a
+                   zero-width interval — excluded for free; trim=0 is
+                   exactly the weighted mean).
+    geomedian      ``iters`` Weiszfeld iterations toward the weighted
+                   geometric median of the per-client factors, seeded at the
+                   weighted mean.
+
+    Returns the reduced (·, r) factor in fp32.
+    """
+    w = _norm_weights(weights)
+    s32 = delta_stack.astype(jnp.float32)
+    if mode == "none":
+        return jnp.einsum("k,k...->...", w, s32)
+    if mode == "norm_clip":
+        c = median_norm_clip_factors(delta_stack, w)
+        return jnp.einsum("k,k...->...", w * c, s32)
+    if mode == "trimmed_mean":
+        wb = jnp.broadcast_to(w.reshape((-1,) + (1,) * (s32.ndim - 1)),
+                              s32.shape)
+        order = jnp.argsort(s32, axis=0)
+        xs = jnp.take_along_axis(s32, order, 0)
+        ws = jnp.take_along_axis(wb, order, 0)
+        cum = jnp.cumsum(ws, axis=0)          # total = 1 (w normalized)
+        eff = jnp.clip(jnp.minimum(cum, 1.0 - trim)
+                       - jnp.maximum(cum - ws, trim), 0.0, None)
+        return jnp.sum(eff * xs, 0) / jnp.maximum(jnp.sum(eff, 0), eps)
+    if mode == "geomedian":
+        y = jnp.einsum("k,k...->...", w, s32)
+        for _ in range(iters):
+            d = jnp.sqrt(jnp.maximum(client_sq_norms(s32 - y[None]),
+                                     eps * eps))
+            inv = w / d                        # zero-weight clients drop out
+            y = jnp.einsum("k,k...->...", inv / jnp.maximum(
+                jnp.sum(inv), eps), s32)
+        return y
+    raise ValueError(f"robust_agg mode {mode!r} not in {ROBUST_MODES}")
+
+
+def robust_factored_lift(delta_stack: jnp.ndarray, basis_stack: jnp.ndarray,
+                         side: str, weights, mode: str = "none",
+                         hetero: bool = False, trim: float = 0.2,
+                         iters: int = 8) -> jnp.ndarray:
+    """Robust 𝒜 for one factored leaf: reduce the (C, ·, r) client stack with
+    ``mode`` and lift once. ``mode='none'`` is EXACTLY
+    :func:`factored_lift_average` (the guarded round program's honest-cohort
+    bit-identity hinges on this). ``hetero=True`` contracts per-client bases
+    (the adaptive round-0 / ``refresh_mode='svd'`` diverged-basis case);
+    coordinate-wise modes are incoherent across heterogeneous bases, so
+    trimmed_mean/geomedian degrade to median-norm clipping there (clip
+    factors are basis-independent — the quarantine + clip pair is what
+    defends the diverged-basis round)."""
+    if mode == "none":
+        if hetero:
+            return factored_lift_average_hetero(delta_stack, basis_stack,
+                                                side, weights)
+        return factored_lift_average(delta_stack, basis_stack[0], side,
+                                     weights)
+    if hetero or mode == "norm_clip":
+        c = median_norm_clip_factors(delta_stack, _norm_weights(weights))
+        d = (delta_stack.astype(jnp.float32)
+             * c.reshape((-1,) + (1,) * (delta_stack.ndim - 1)))
+        if hetero:
+            return factored_lift_average_hetero(d, basis_stack, side, weights)
+        return factored_lift_average(d, basis_stack[0], side, weights)
+    red = robust_factored_reduce(delta_stack, weights, mode, trim=trim,
+                                 iters=iters)
+    return proj.project_back(red, basis_stack[0].astype(jnp.float32), side)
+
+
+def screen_factored_clients(delta_tree: PyTree, v_tree: Optional[PyTree],
+                            scales: jnp.ndarray, weights: jnp.ndarray,
+                            zmax: float = 6.0) -> jnp.ndarray:
+    """In-round quarantine screen: (C,) bool, True = contribution passes.
+
+    A client fails when any of its factored uplink leaves (accumulators Rᵢ,
+    projected moments ṽᵢ, base scale) contain non-finite values, or when its
+    overall factored delta norm exceeds ``zmax`` × the weighted median norm
+    of the cohort (weights carry the participation mask, so dropped clients
+    neither vote for the median nor shift it). A zero median disables the
+    outlier test (no scale to screen against). O(C·r·(m+n)) — never lifts.
+    """
+    finite = jnp.isfinite(jnp.asarray(scales, jnp.float32))
+    sq = jnp.zeros_like(jnp.asarray(weights, jnp.float32))
+    for x in jax.tree_util.tree_leaves(delta_tree):
+        x32 = x.astype(jnp.float32)
+        finite &= jnp.all(jnp.isfinite(x32), axis=tuple(range(1, x32.ndim)))
+        sq = sq + client_sq_norms(x32)
+    if v_tree is not None:
+        for x in jax.tree_util.tree_leaves(v_tree,
+                                           is_leaf=lambda x: x is None):
+            if x is None:
+                continue
+            x32 = x.astype(jnp.float32)
+            finite &= jnp.all(jnp.isfinite(x32),
+                              axis=tuple(range(1, x32.ndim)))
+    norm = jnp.sqrt(sq)
+    med = weighted_quantile(norm, jnp.where(finite, weights, 0.0), 0.5)
+    ok_norm = (med <= 0.0) | (norm <= zmax * med)
+    return finite & ok_norm
+
+
+def quarantine_weights(w: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """Fold a quarantine verdict into the round's effective weights: failed
+    clients are zeroed and the survivors renormalized. An all-pass verdict
+    returns ``w`` UNTOUCHED (no renormalization round-off — the honest
+    cohort stays bit-identical to the unguarded round); an all-fail verdict
+    degrades to the original weights over fully-sanitized (zeroed) stacks,
+    i.e. the round reduces to the decayed base — a skipped round, not NaNs.
+    """
+    wq = jnp.where(keep, w, 0.0)
+    s = jnp.sum(wq)
+    return jnp.where(jnp.all(keep), w,
+                     jnp.where(s > 0, wq / jnp.maximum(s, 1e-30), w))
+
+
+def mask_client_rows(tree: PyTree, keep: jnp.ndarray) -> PyTree:
+    """Zero the client rows that failed quarantine (None-leaf aware). Zero
+    weights alone do NOT remove a corrupted client — 0·NaN = NaN — so every
+    weighted reduction must see sanitized stacks. ``jnp.where`` with an
+    all-true verdict returns each leaf bitwise unchanged (honest cohorts
+    short-circuit exactly)."""
+    def one(x):
+        if x is None:
+            return None
+        return jnp.where(keep.reshape((-1,) + (1,) * (x.ndim - 1)), x,
+                         jnp.zeros((), x.dtype))
+    return jax.tree_util.tree_map(one, tree, is_leaf=lambda x: x is None)
+
+
 def truncate_to_rank(deltas: PyTree, rank: int) -> PyTree:
     """Post-hoc SVD truncation of dense deltas back to rank r (diagnostic /
     the 'Averaging + SVD' baseline in Appendix F)."""

@@ -165,6 +165,27 @@ class FedConfig:
     # ``population.PopulationRunner``; the engine itself only consumes the
     # per-round masks.
     participation: Optional[ParticipationConfig] = None
+    # Defense-in-depth (core.aggregation robust section): the guarded round
+    # program screens/aggregates against corrupted client uploads, entirely
+    # in factored coordinates. quarantine=True turns on the in-round screen
+    # (non-finite reduction + median-norm outlier test at quarantine_zmax ×
+    # the weighted median client norm); failures fold into the exclude-zero
+    # mask path — zero renormalized weight in 𝒜, excluded from the AJIVE
+    # score Gram in 𝒮, stacks sanitized so 0·NaN never reaches a reduction.
+    # robust_agg replaces the weighted mean over factored client deltas in
+    # 𝒜: 'norm_clip' (median-of-norms clipping), 'trimmed_mean'
+    # (coordinate-wise weighted trim by robust_trim per tail), 'geomedian'
+    # (robust_iters Weiszfeld iterations); heterogeneous-basis rounds
+    # degrade the coordinate-wise modes to norm clipping. The guarded
+    # program is compiled SEPARATELY — with both knobs at their defaults
+    # and no injected attack, rounds run the pre-PR unguarded program, and
+    # an all-honest cohort through the guarded program is bit-identical to
+    # it (all-pass short-circuit; asserted in tests).
+    robust_agg: str = "none"
+    quarantine: bool = False
+    quarantine_zmax: float = 6.0
+    robust_trim: float = 0.2
+    robust_iters: int = 8
 
 
 # ------------------------------------------------------------ trainables ----
@@ -278,6 +299,21 @@ class FedEngine:
         # masks short-circuit onto it — bit-identical by construction).
         self._round_masked_jit = None
         self._rounds_scan_masked_jit = None
+        # Guarded variants (quarantine / robust_agg / injected attacks):
+        # again separate compiled programs, so the default round is
+        # byte-for-byte the pre-defense program and honest cohorts through
+        # the guard short-circuit onto the same math bit-identically.
+        if cfg.robust_agg not in agg.ROBUST_MODES:
+            raise ValueError(f"robust_agg={cfg.robust_agg!r} not in "
+                             f"{agg.ROBUST_MODES}")
+        self._guard_cfg = bool(cfg.quarantine) or cfg.robust_agg != "none"
+        if self._guard_cfg and not self._factored:
+            raise ValueError(
+                "quarantine/robust_agg need the factored client model "
+                "(GaLore methods with factored_clients=True) — the screen "
+                "and the robust reductions run on rank-r factored stacks")
+        self._round_guard_jit = None
+        self._rounds_scan_guard_jit = None
 
     # ----------------------------------------------------------- optimizer --
     def _make_tx(self):
@@ -385,7 +421,21 @@ class FedEngine:
             raise ValueError(f"mask shape {m.shape} != cohort ({k_clients},)")
         return None if m.all() else m
 
-    def run_round(self, client_batches: PyTree, weights=None, mask=None):
+    @staticmethod
+    def _canon_attack(attack, k_clients):
+        """None | all-ones attack vectors collapse to None: an adversary-free
+        round never forces the guarded program on its own (a quarantine /
+        robust_agg config still does)."""
+        if attack is None:
+            return None
+        a = np.asarray(attack, np.float32).reshape(-1)
+        if a.shape != (k_clients,):
+            raise ValueError(f"attack shape {a.shape} != cohort "
+                             f"({k_clients},)")
+        return None if np.all(a == 1.0) else a
+
+    def run_round(self, client_batches: PyTree, weights=None, mask=None,
+                  attack=None):
         """client_batches: pytree with leading axes (K clients, T steps, ...).
 
         Returns dict of metrics. Mutates engine global state. Default: the
@@ -401,15 +451,40 @@ class FedEngine:
         calling without a mask. The eager reference round applies the
         weight masking only (no score exclusion — it predates the
         participation layer and stays the unmasked oracle).
+
+        ``attack`` (optional float (K,)) injects per-client uplink
+        corruption INSIDE the compiled round: each client's factored
+        contribution (accumulator, projected moments) is multiplied by its
+        entry after the local phase (NaN = corrupted shard, -1 = sign flip,
+        s = norm scale attack; see ``population.corruption_multipliers``).
+        An all-ones vector short-circuits to no attack. Any attack — or a
+        ``quarantine``/``robust_agg`` config — selects the guarded program:
+        screen (if quarantine) → sanitize + renormalize → robust 𝒜 →
+        exclusion-aware 𝒮. An honest cohort through the guarded program is
+        bit-identical to the unguarded one.
         """
         k_clients = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
         mask = self._canon_mask(mask, k_clients)
+        attack = self._canon_attack(attack, k_clients)
+        guarded = self._guard_cfg or attack is not None
         if not (self.cfg.fused_round and self.cfg.factored_sync):
+            if guarded:
+                raise ValueError(
+                    "quarantine/robust_agg/attack injection require the "
+                    "fused factored round (fused_round + factored_sync)")
             w = (self._normalize_weights(weights, k_clients) if mask is None
                  else self._masked_weights(weights, mask, k_clients))
             return self._run_round_eager(client_batches, w, k_clients)
 
-        if mask is None:
+        extra = ()
+        if guarded:
+            w = (self._normalize_weights(weights, k_clients) if mask is None
+                 else self._masked_weights(weights, mask, k_clients))
+            round_fn = self._round_guard_jitted()
+            a = (np.ones((k_clients,), np.float32) if attack is None
+                 else attack)
+            extra = (jnp.asarray(a, jnp.float32),)
+        elif mask is None:
             w = self._normalize_weights(weights, k_clients)
             round_fn = self._round_jitted()
         else:
@@ -419,7 +494,8 @@ class FedEngine:
         out = round_fn(
             self._client_state, self._client_opt, self.global_trainable,
             self.frozen, self.synced_v,
-            jnp.asarray(self.round_idx, jnp.int32), client_batches, w)
+            jnp.asarray(self.round_idx, jnp.int32), client_batches, w,
+            *extra)
         if self._frozen_mutates():
             (self._client_state, self._client_opt, self.global_trainable,
              self.frozen, self.synced_v, losses) = out
@@ -471,14 +547,24 @@ class FedEngine:
                 for r in range(int(k_rounds))])
             return {"local_loss": losses,
                     "mean_final_loss": float(jnp.mean(losses[-1, :, -1]))}
-        if masks is None:
+        # Attack injection is not expressible inside the scan driver (a
+        # per-round attack would ride the xs, but corruption plans come from
+        # PopulationRunner, which drives sequential rounds anyway) — the
+        # guarded scan exists so a quarantine/robust_agg config still gets
+        # the one-dispatch sweep, guarding every round with a unit attack.
+        if masks is None and not self._guard_cfg:
             w = self._normalize_weights(weights, k_clients)
             scan_fn = self._rounds_scan_jitted()
         else:
             # Per-round effective weights as scan xs; exclusion-aware 𝒮.
-            w = jnp.stack([self._masked_weights(weights, m, k_clients)
-                           for m in masks])
-            scan_fn = self._rounds_scan_masked_jitted()
+            if masks is None:
+                w_one = self._normalize_weights(weights, k_clients)
+                w = jnp.tile(w_one[None], (int(k_rounds), 1))
+            else:
+                w = jnp.stack([self._masked_weights(weights, m, k_clients)
+                               for m in masks])
+            scan_fn = (self._rounds_scan_guard_jitted() if self._guard_cfg
+                       else self._rounds_scan_masked_jitted())
 
         synced_v = self.synced_v
         if synced_v is None and self._method_syncs():
@@ -499,11 +585,13 @@ class FedEngine:
         return {"local_loss": losses,                      # (K, C, T)
                 "mean_final_loss": float(jnp.mean(losses[-1, :, -1]))}
 
-    def _build_rounds_scan(self, exclude_zero: bool):
+    def _build_rounds_scan(self, exclude_zero: bool, guard: bool = False):
         """jit a scan-over-rounds driver. Unmasked: one weight vector closed
         into every round (scan-invariant). Masked (``exclude_zero``): one
         effective weight vector per round rides the xs, and 𝒮 excludes
-        zero-weight clients from the joint-basis estimate."""
+        zero-weight clients from the joint-basis estimate. ``guard`` runs
+        every round through the quarantine/robust-𝒜 program (unit attack —
+        per-round injected attacks don't ride the scan)."""
         frozen_mutates = self._frozen_mutates()
 
         def scan_rounds(global_tr, frozen, synced_v, round_idx, batches, w):
@@ -516,9 +604,13 @@ class FedEngine:
                     g_tr, fz, sv, ridx = carry
                 else:
                     (g_tr, sv, ridx), fz = carry, frozen
+                kw = {}
+                if guard:
+                    kc = jax.tree_util.tree_leaves(round_b)[0].shape[0]
+                    kw["attack"] = jnp.ones((kc,), jnp.float32)
                 _, _, g_tr, fz, sv, losses = self._round_core(
                     g_tr, fz, sv, ridx, round_b, w_r,
-                    exclude_zero=exclude_zero)
+                    exclude_zero=exclude_zero, **kw)
                 new_carry = ((g_tr, fz, sv, ridx + 1) if frozen_mutates
                              else (g_tr, sv, ridx + 1))
                 return new_carry, losses
@@ -541,6 +633,12 @@ class FedEngine:
             self._rounds_scan_masked_jit = self._build_rounds_scan(
                 exclude_zero=True)
         return self._rounds_scan_masked_jit
+
+    def _rounds_scan_guard_jitted(self):
+        if self._rounds_scan_guard_jit is None:
+            self._rounds_scan_guard_jit = self._build_rounds_scan(
+                exclude_zero=True, guard=True)
+        return self._rounds_scan_guard_jit
 
     # ------------------------------------------------- fused round program --
     def _method_syncs(self) -> bool:
@@ -660,14 +758,17 @@ class FedEngine:
                 and self.galore_cfg.refresh_mode != "random")
 
     def _aggregate_factored(self, global_trainable, out_deltas, out_opt,
-                            base_scales, w, round_idx):
+                            base_scales, w, round_idx, robust: str = "none"):
         """𝒜 for factored clients: ``(Σᵢ wᵢ sᵢ)·W + Σᵢ wᵢ lift(Rᵢ, Bᵢ)`` per
         target leaf (``sᵢ`` the per-client decayed base scales — identical
         under a constant lr, per-client under a schedule). Shared-basis
         rounds reduce in projected coordinates and lift once; the adaptive
         round-0 diverged-basis case contracts the per-client lifts
         client-by-client (a ``lax.cond``, mirroring
-        :meth:`_sync_states_pure`) — no (C, m, n) stack either way."""
+        :meth:`_sync_states_pure`) — no (C, m, n) stack either way.
+        ``robust`` swaps the weighted mean over the factored stacks for a
+        robust reduction (``aggregation.robust_factored_lift``; 'none' is
+        exactly the plain path)."""
         bases = gal.extract_bases(gal.galore_state_of(out_opt))
         round0_hetero = (self.galore_cfg.adaptive_steps > 0
                          and self.galore_cfg.refresh_mode != "random")
@@ -678,11 +779,14 @@ class FedEngine:
                     else proj.LEFT)
 
             def shared(_):
-                return agg.factored_lift_average(d_stack, b_stack[0], side, w)
+                return agg.robust_factored_lift(
+                    d_stack, b_stack, side, w, robust, hetero=False,
+                    trim=self.cfg.robust_trim, iters=self.cfg.robust_iters)
 
             def hetero(_):
-                return agg.factored_lift_average_hetero(d_stack, b_stack,
-                                                        side, w)
+                return agg.robust_factored_lift(
+                    d_stack, b_stack, side, w, robust, hetero=True,
+                    trim=self.cfg.robust_trim, iters=self.cfg.robust_iters)
 
             if round0_hetero:
                 lifted = jax.lax.cond(round_idx == 0, hetero, shared,
@@ -694,8 +798,49 @@ class FedEngine:
         return jax.tree_util.tree_map(one, global_trainable, out_deltas,
                                       bases)
 
+    def _apply_guard(self, out_d, out_opt, scales, w, attack):
+        """The in-round defense gate, between the local phase and 𝒜/𝒮.
+
+        1. Adversary injection: each client's uplink — factored accumulators
+           AND projected moments — is multiplied by its ``attack`` entry
+           (1.0 for honest clients: bitwise no-op).
+        2. Quarantine screen (``cfg.quarantine``): non-finite + median-norm
+           outlier test over the factored contributions
+           (``aggregation.screen_factored_clients``). Failing clients are
+           folded into the exclude-zero mask path — weights zeroed and
+           renormalized over the survivors, stacks/scales sanitized so
+           0·NaN never reaches a weighted reduction, moments zeroed out of
+           the AJIVE score Gram. An all-pass verdict leaves every operand
+           bitwise untouched (the honest short-circuit).
+
+        Returns (out_d, out_opt, scales, w, quarantined_count).
+        """
+        tmap = jax.tree_util.tree_map
+        ab = lambda x: attack.astype(jnp.float32).reshape(
+            (-1,) + (1,) * (x.ndim - 1))
+        out_d = tmap(lambda x: (x.astype(jnp.float32) * ab(x)).astype(
+            x.dtype), out_d)
+        g = gal.galore_state_of(out_opt)
+        v_tree = tmap(
+            lambda x: None if x is None
+            else (x.astype(jnp.float32) * ab(x)).astype(x.dtype),
+            gal.extract_projected_v(g), is_leaf=lambda x: x is None)
+        n_quar = jnp.zeros([], jnp.int32)
+        if self.cfg.quarantine:
+            keep = agg.screen_factored_clients(
+                out_d, v_tree, scales, w, zmax=self.cfg.quarantine_zmax)
+            out_d = agg.mask_client_rows(out_d, keep)
+            v_tree = agg.mask_client_rows(v_tree, keep)
+            scales = jnp.where(keep, scales, 1.0)   # enters the sbar einsum
+            w = agg.quarantine_weights(w, keep)
+            n_quar = jnp.sum((~keep).astype(jnp.int32))
+        out_opt = gal.replace_galore_state(out_opt,
+                                           gal.with_projected_v(g, v_tree))
+        return out_d, out_opt, scales, w, n_quar
+
     def _round_core(self, global_trainable, frozen, synced_v, round_idx,
-                    client_batches, w, exclude_zero: bool = False):
+                    client_batches, w, exclude_zero: bool = False,
+                    attack=None):
         """The whole federated round as a pure function: InitState → T local
         steps (vmapped clients, streamed over cohort chunks) → 𝒜 → factored
         𝒮. Shared by the per-round jitted program and the scan-over-rounds
@@ -711,7 +856,14 @@ class FedEngine:
         losses — stack to the full (C, …) cohort (each client's computation
         is independent, so chunked ≡ unchunked client-for-client). 𝒜 and 𝒮
         then run once on the full factored stacks, keeping them bit-identical
-        across chunk sizes."""
+        across chunk sizes.
+
+        ``attack`` (guarded variant only) is the (C,) per-client corruption
+        multiplier injected after the local phase; its presence also arms
+        the quarantine screen and robust 𝒜 per the config
+        (:meth:`_apply_guard`)."""
+        if attack is not None and not self._factored:
+            raise ValueError("the guarded round requires factored clients")
         k_clients = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
         b = self._chunk_size(k_clients)
         n_chunks = k_clients // b
@@ -765,8 +917,14 @@ class FedEngine:
                 local_fn = liftfree_fn
 
             out_d, out_opt, losses, scales = stream(local_fn, client_batches)
+            robust = "none"
+            if attack is not None:
+                out_d, out_opt, scales, w, _ = self._apply_guard(
+                    out_d, out_opt, scales, w, attack)
+                robust = self.cfg.robust_agg
             new_global = self._aggregate_factored(
-                global_trainable, out_d, out_opt, scales, w, round_idx)
+                global_trainable, out_d, out_opt, scales, w, round_idx,
+                robust=robust)
             new_synced = self._sync_states_pure(out_opt, w, round_idx,
                                                 exclude_zero)
             return out_d, out_opt, new_global, frozen, new_synced, losses
@@ -800,8 +958,21 @@ class FedEngine:
         (an undonated output would memcpy the whole base every round)."""
         return self.spec.aggregation in ("lift_merge", "lift_refac")
 
-    def _build_round_jit(self, exclude_zero: bool):
+    def _build_round_jit(self, exclude_zero: bool, guard: bool = False):
         frozen_mutates = self._frozen_mutates()
+
+        if guard:
+            def round_fn(client_tr, client_opt, global_trainable, frozen,
+                         synced_v, round_idx, client_batches, w, attack):
+                del client_tr, client_opt
+                out = self._round_core(global_trainable, frozen, synced_v,
+                                       round_idx, client_batches, w,
+                                       exclude_zero=True, attack=attack)
+                if frozen_mutates:
+                    return out
+                out_tr, out_opt, new_global, _, new_synced, losses = out
+                return out_tr, out_opt, new_global, new_synced, losses
+            return jax.jit(round_fn, donate_argnums=(0, 1))
 
         def round_fn(client_tr, client_opt, global_trainable, frozen,
                      synced_v, round_idx, client_batches, w):
@@ -830,6 +1001,17 @@ class FedEngine:
         if self._round_masked_jit is None:
             self._round_masked_jit = self._build_round_jit(exclude_zero=True)
         return self._round_masked_jit
+
+    def _round_guard_jitted(self):
+        """The guarded round program: attack injection → quarantine screen →
+        robust 𝒜 → exclusion-aware 𝒮, always exclude-zero (quarantined
+        clients fold into the same mask path as dropped ones). Compiled
+        separately; honest cohorts through it are bit-identical to the
+        unguarded program (all-pass short-circuit — asserted in tests)."""
+        if self._round_guard_jit is None:
+            self._round_guard_jit = self._build_round_jit(
+                exclude_zero=True, guard=True)
+        return self._round_guard_jit
 
     def _run_round_eager(self, client_batches, w, k_clients):
         """Stage-by-stage reference round (the parity oracle): separately

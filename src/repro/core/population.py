@@ -1,45 +1,78 @@
-"""Planet-scale cohorts: population store, fault injection, stale buffer.
+"""Planet-scale cohorts: population store, fault/adversary injection, stale
+buffer, crash-resumable orchestration.
 
 The compiled federated round trains a fixed C-client cohort; a real
 federation samples that cohort each round from a large, mostly-offline
-population with heterogeneous capacity, and some sampled clients drop out or
-deliver their update rounds late. This module decouples the two worlds:
+population with heterogeneous capacity — and some sampled clients drop out,
+deliver their update rounds late, or upload corrupted state. This module
+decouples the two worlds:
 
 ParticipationConfig / sample_cohort
-    Seeded per-round fault injection: which population clients the round's C
-    compiled slots hold, which of them drop (never contribute), and which
-    straggle (contribute ``delay`` rounds late). The plan for round k is a
-    pure host function of ``(config, k)`` — identical whether rounds are
-    driven one ``run_round`` at a time or as one ``lax.scan`` sweep, and
-    across restarts. Every plan keeps ≥ 1 on-time participant (a round with
-    zero effective weight is undefined).
+    Seeded per-round fault AND adversary injection: which population clients
+    the round's C compiled slots hold, which drop (never contribute), which
+    straggle (contribute ``delay`` rounds late), and which are corrupted
+    this round (NaN shard / sign-flip / norm-scale attack —
+    ``corrupt_rate``, realized as uplink multipliers by
+    :func:`corruption_multipliers`). The plan for round k is a pure host
+    function of ``(config, k)`` — identical whether rounds are driven one
+    ``run_round`` at a time or as one ``lax.scan`` sweep, and across
+    restarts; corruption draws come strictly AFTER the fault draws, so
+    enabling adversaries never perturbs who drops or straggles. Every plan
+    keeps ≥ 1 HONEST on-time participant (a round with zero trustworthy
+    weight is undefined; ``corrupt_rate >= 1`` raises).
 
 ClientStateStore
     Sticky per-client factored state for the whole virtual population: the
     rank-r accumulator rows ``R_i`` and projected-moment rows ṽ_i each
     client last produced, O(r(m+n)) per client — ~10⁵ cold clients fit in
     host memory, and least-recently-used shards spill to disk through
-    ``checkpoint.io`` (whose atomic save + payload validation make a crash
-    mid-spill recoverable: the shard falls back to its last complete spill,
-    or to cold zeros). ``gather`` assembles a sampled cohort's rows into the
-    round's (C, ·, r) stacked layout; ``scatter`` writes the round's donated
-    buffer rows back under the population ids.
+    ``checkpoint.io`` (whose atomic save + payload validation + non-finite
+    rejection make a crash mid-spill recoverable: the shard falls back to
+    its last complete spill, or to cold zeros — never to NaN rows).
+    ``gather`` assembles a sampled cohort's rows into the round's (C, ·, r)
+    stacked layout; ``scatter`` writes the round's donated buffer rows back
+    under the population ids.
 
 StalenessBuffer
     FedBuff-style bounded-staleness aggregation: a straggler's factored
     contribution (R_i rows + ṽ_i rows + birth basis + base scale) is masked
     out of its birth round and buffered; at its due round it merges into the
     global weights and the synced moments with a ``staleness_decay**delay``
-    weight. Delay-0 participation bypasses the buffer entirely, so
-    ``max_staleness=0`` is *exactly* the synchronous round.
+    weight. ``capacity`` bounds the buffer: pushing onto a full buffer
+    evicts (drops) the earliest-due entry. Delay-0 participation bypasses
+    the buffer entirely — even at capacity — so ``max_staleness=0`` is
+    *exactly* the synchronous round.
 
-PopulationRunner
-    The orchestration loop gluing the above to ``core.fed.FedEngine``:
-    plan → merge due stale updates → gather → masked fused round → harvest
-    the round's retained client buffers → buffer stragglers → scatter →
-    drift observatory. The round program itself never changes shape; all
-    population machinery lives at the host boundary around the donated
-    buffers.
+PopulationRunner — the round lifecycle is plan → quarantine → aggregate →
+snapshot:
+    1. **plan**: ``sample_cohort`` fixes the round's participants, faults,
+       and adversary assignments (pure in (config, round)).
+    2. **quarantine**: the fused round runs with the plan's participation
+       mask and corruption multipliers; inside the compiled program the
+       engine screens every factored contribution (non-finite + median-norm
+       outlier tests) and folds failures into the zero-weight mask path —
+       renormalized out of 𝒜, excluded from the AJIVE score Gram in 𝒮,
+       stacks sanitized. Corrupted clients are also barred from scattering
+       poisoned rows into the store. A drift/loss tripwire can additionally
+       roll the federation back to the round-start state and replay with
+       host-detected offenders force-quarantined (bounded retries, then
+       degrade with a warning).
+    3. **aggregate**: robust factored 𝒜 + exclusion-aware 𝒮 produce the new
+       global state; due stale updates merged beforehand, stragglers
+       buffered after.
+    4. **snapshot**: on the configured cadence the FULL federation state —
+       server weights, synced moments, client buffers, staleness-buffer
+       entries, store rows, history — is written through ``checkpoint.io``'s
+       atomic writer (``keep_last`` GC bounds disk); :meth:`PopulationRunner.
+       restore` rebuilds a killed run from the latest snapshot with
+       loss-curve parity to an uninterrupted run.
+
+Bit-identity guarantees (each asserted in tests): a full-participation mask
+short-circuits onto the unmasked compiled program; an all-honest cohort
+through the guarded (quarantine/robust) program is bit-identical to the
+unguarded round; ``max_staleness=0`` is bit-exactly the synchronous round;
+and chunked ≡ unchunked cohort streaming — so every defense and scaling
+layer is pay-for-what-you-use.
 
 Drift observatory: :func:`moment_divergence` (weighted dispersion of the
 per-client projected moments around the synced v̄ — the quantity 𝒮 is
@@ -51,6 +84,9 @@ and ``benchmarks/bench_state_mismatch.py`` share these implementations.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import warnings
 from collections import OrderedDict
 from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
@@ -87,6 +123,18 @@ class ParticipationConfig:
     staleness_decay  β: a delay-d stale update merges with weight β^d.
     stale_scale      server-side learning rate on the stale merge.
     seed             fault-injection seed, independent of the train seed.
+    corrupt_rate     P(an on-time client uploads corrupted state this
+                     round). Adversary draws come strictly after the fault
+                     draws (enabling them never changes who drops or
+                     straggles), only on-time clients are corrupted (a
+                     dropped adversary contributes nothing; a straggling
+                     one would be screened at merge), and every plan keeps
+                     ≥ 1 honest on-time participant — ``corrupt_rate >= 1``
+                     makes that impossible and raises.
+    corrupt_modes    which attacks the adversary mixes, drawn uniformly per
+                     corrupted client: 'nan' (non-finite shard), 'sign_flip'
+                     (negated update), 'scale' (update × attack_scale).
+    attack_scale     multiplier of the 'scale' norm attack.
     """
     population: int = 0
     dropout_rate: float = 0.0
@@ -95,6 +143,12 @@ class ParticipationConfig:
     staleness_decay: float = 0.5
     stale_scale: float = 1.0
     seed: int = 0
+    corrupt_rate: float = 0.0
+    corrupt_modes: tuple = ("nan", "sign_flip", "scale")
+    attack_scale: float = 100.0
+
+
+CORRUPT_MODES = ("nan", "sign_flip", "scale")
 
 
 class CohortPlan(NamedTuple):
@@ -104,11 +158,15 @@ class CohortPlan(NamedTuple):
     mask     (C,) bool — True = on-time participant (contributes this round)
     delays   (C,) int64 — 0 on-time, d ∈ {1..k} straggler (lands d rounds
              late), -1 dropped (never contributes)
+    corrupt  (C,) int64 adversary assignment — 0 honest, j ≥ 1 the 1-based
+             index into ``pcfg.corrupt_modes`` (None on hand-built plans:
+             treated as all-honest)
     """
     round_idx: int
     clients: np.ndarray
     mask: np.ndarray
     delays: np.ndarray
+    corrupt: Optional[np.ndarray] = None
 
 
 def sample_cohort(pcfg: ParticipationConfig, cohort: int, round_idx: int,
@@ -118,8 +176,10 @@ def sample_cohort(pcfg: ParticipationConfig, cohort: int, round_idx: int,
     Deterministic in ``(pcfg.seed, round_idx)`` only — NOT in call order —
     so per-round drivers and scan-over-rounds drivers (and restarts) see
     identical plans. Draw order is fixed (sample → dropout → straggle →
-    delays) so disabling a downstream knob never perturbs an upstream draw:
-    ``max_staleness=0`` yields the same drops as ``straggler_rate=0``.
+    delays → corruption) so disabling a downstream knob never perturbs an
+    upstream draw: ``max_staleness=0`` yields the same drops as
+    ``straggler_rate=0``, and ``corrupt_rate=0`` yields the same
+    clients/mask/delays as any positive rate.
     """
     pop = population if population is not None else (pcfg.population or cohort)
     if pop < cohort:
@@ -146,8 +206,55 @@ def sample_cohort(pcfg: ParticipationConfig, cohort: int, round_idx: int,
         # victim (the first faulted slot) back to on-time.
         delays[0] = 0
     mask = delays == 0
+    # Adversary assignment — drawn strictly after the fault plan so the
+    # clients/mask/delays above are invariant in corrupt_rate. Only on-time
+    # clients are corruptible: a dropped adversary contributes nothing, and
+    # corrupting a straggler would merely be screened at its stale merge.
+    corrupt = np.zeros(cohort, dtype=np.int64)
+    if pcfg.corrupt_rate > 0.0:
+        for m in pcfg.corrupt_modes:
+            if m not in CORRUPT_MODES:
+                raise ValueError(f"corrupt mode {m!r} not in "
+                                 f"{CORRUPT_MODES}")
+        if not pcfg.corrupt_modes:
+            raise ValueError("corrupt_rate > 0 needs >= 1 corrupt mode")
+        corrupt_u = rng.random(cohort)
+        bad = mask & (corrupt_u < pcfg.corrupt_rate)
+        if bad.any():
+            corrupt[bad] = rng.integers(1, len(pcfg.corrupt_modes) + 1,
+                                        size=int(bad.sum()))
+        if not (mask & (corrupt == 0)).any():
+            # The honest counterpart of the on-time guarantee: quarantine
+            # will (correctly) zero every corrupted contribution, so a
+            # fully-adversarial on-time set would leave the round without
+            # trustworthy weight. Pardon one deterministic victim — unless
+            # the config makes honesty impossible.
+            if pcfg.corrupt_rate >= 1.0:
+                raise ValueError(
+                    "corrupt_rate >= 1 leaves no honest on-time "
+                    "participant in any round — quarantine + dropout must "
+                    "leave at least one trustworthy client")
+            corrupt[int(np.nonzero(mask)[0][0])] = 0
     return CohortPlan(round_idx=int(round_idx), clients=ids, mask=mask,
-                      delays=delays)
+                      delays=delays, corrupt=corrupt)
+
+
+def corruption_multipliers(plan: CohortPlan,
+                           pcfg: ParticipationConfig) -> Optional[np.ndarray]:
+    """Realize a plan's adversary assignments as the (C,) float32 per-client
+    uplink multipliers the guarded round injects after the local phase
+    (``FedEngine.run_round(attack=)``): 1.0 honest, NaN corrupted shard,
+    -1.0 sign flip, ``attack_scale`` norm attack. None when the plan has no
+    adversaries (the engine then never leaves the unguarded/un-attacked
+    dispatch on its own)."""
+    if plan.corrupt is None or not (plan.corrupt != 0).any():
+        return None
+    value = {"nan": np.float32(np.nan), "sign_flip": np.float32(-1.0),
+             "scale": np.float32(pcfg.attack_scale)}
+    mult = np.ones(plan.corrupt.shape[0], np.float32)
+    for i in np.nonzero(plan.corrupt)[0]:
+        mult[i] = value[pcfg.corrupt_modes[int(plan.corrupt[i]) - 1]]
+    return mult
 
 
 # ------------------------------------------------------ client-state store --
@@ -227,10 +334,12 @@ class ClientStateStore:
                 # numpy views are read-only, and shard rows must be writable
                 data = [np.array(x) for x in restored]
                 self.loads += 1
-            except FileNotFoundError:
-                # Never spilled, or a spill was cut short mid-write: the
+            except (FileNotFoundError, ValueError):
+                # Never spilled, a spill cut short mid-write, or a payload
+                # carrying non-finite rows (restore's rejection): the
                 # atomic writer guarantees nothing half-written sits under
-                # the final name, so "missing/invalid" cleanly means "cold".
+                # the final name, so "missing/invalid/poisoned" cleanly
+                # means "cold" — NaN rows never round-trip into the store.
                 data = None
         if data is None:
             data = self._zero_shard(shard)
@@ -322,13 +431,34 @@ class StaleEntry(NamedTuple):
 
 class StalenessBuffer:
     """FedBuff-style bounded buffer: entries keyed by due round; by
-    construction no entry lives longer than ``max_staleness`` rounds."""
+    construction no entry lives longer than ``max_staleness`` rounds.
 
-    def __init__(self):
+    ``capacity`` (None = unbounded) additionally caps the number of buffered
+    entries: pushing onto a full buffer first evicts the entry with the
+    earliest due round (FIFO among ties — the entry closest to merging,
+    i.e. the least information lost relative to its decay weight), DROPS it
+    (counted in ``evictions``, returned to the caller for observability),
+    and then admits the new entry. Only stragglers ever reach ``push`` —
+    delay-0 participation bypasses the buffer entirely, so a full buffer
+    never affects on-time clients."""
+
+    def __init__(self, capacity: Optional[int] = None):
+        if capacity is not None and int(capacity) < 1:
+            raise ValueError(f"capacity must be >= 1 or None, got {capacity}")
+        self.capacity = None if capacity is None else int(capacity)
         self._entries: List[StaleEntry] = []
+        self.evictions = 0
 
-    def push(self, entry: StaleEntry):
+    def push(self, entry: StaleEntry) -> Optional[StaleEntry]:
+        evicted = None
+        if (self.capacity is not None
+                and len(self._entries) >= self.capacity):
+            idx = min(range(len(self._entries)),
+                      key=lambda i: (self._entries[i].due_round, i))
+            evicted = self._entries.pop(idx)
+            self.evictions += 1
         self._entries.append(entry)
+        return evicted
 
     def pop_due(self, round_idx: int) -> List[StaleEntry]:
         due = [e for e in self._entries if e.due_round <= round_idx]
@@ -413,12 +543,34 @@ class PopulationRunner:
     Requires the fused factored round (``fused_round and factored_sync``) —
     the harvest reads the engine's retained post-round client buffers, which
     only the fused path keeps.
+
+    Defense-in-depth layers (all off by default):
+
+    * **Adversary injection** — when the participation config draws
+      corrupted clients, their uplink is perturbed *inside* the compiled
+      round via the engine's attack operand (``corruption_multipliers``),
+      and their rows are excluded from the sticky-row scatter.
+    * **Snapshots** — ``snapshot_dir`` + ``snapshot_every=k`` persist the
+      full federation state (global, retained client buffers, staleness
+      buffer, store round-stamps, history) every k rounds through the
+      atomic checkpoint writer, retaining ``snapshot_keep`` snapshots.
+    * **Tripwire** — ``drift_tripwire`` / ``loss_tripwire`` thresholds
+      arm a host-side guard: when a round's ``moment_divergence`` or
+      ``mean_final_loss`` spikes past the threshold (or goes non-finite),
+      the runner rolls the federation back to the captured round-start
+      state and replays the round with the offending clients quarantined
+      (host-side screen of the harvested uplink), for at most
+      ``tripwire_retries`` replays before degrading with a warning.
     """
 
     def __init__(self, engine, batches_for: Callable[[np.ndarray, int], PyTree],
                  cohort: int, pcfg: Optional[ParticipationConfig] = None,
                  store_dir: Optional[str] = None, shard_size: int = 1024,
-                 max_resident_shards: Optional[int] = None):
+                 max_resident_shards: Optional[int] = None,
+                 buffer_capacity: Optional[int] = None,
+                 snapshot_dir: Optional[str] = None, snapshot_every: int = 0,
+                 snapshot_keep: int = 3, drift_tripwire: float = 0.0,
+                 loss_tripwire: float = 0.0, tripwire_retries: int = 1):
         if not (engine.cfg.fused_round and engine.cfg.factored_sync):
             raise ValueError("PopulationRunner requires the fused factored "
                              "round (it harvests the retained client "
@@ -431,8 +583,15 @@ class PopulationRunner:
         self.store = ClientStateStore(
             self.population, self._row_template(), directory=store_dir,
             shard_size=shard_size, max_resident_shards=max_resident_shards)
-        self.buffer = StalenessBuffer()
+        self.buffer = StalenessBuffer(capacity=buffer_capacity)
         self.history: List[Dict[str, float]] = []
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = int(snapshot_every)
+        self.snapshot_keep = int(snapshot_keep)
+        self.drift_tripwire = float(drift_tripwire)
+        self.loss_tripwire = float(loss_tripwire)
+        self.tripwire_retries = int(tripwire_retries)
+        self._last_harvest: Optional[Dict[str, PyTree]] = None
 
     # -- templates / layout --
     def _galore_shapes(self):
@@ -583,8 +742,56 @@ class PopulationRunner:
     def run_round(self, weights: Optional[np.ndarray] = None
                   ) -> Dict[str, Any]:
         eng = self.engine
+        plan = sample_cohort(self.pcfg, self.cohort, eng.round_idx,
+                             self.population)
+        tripwire = self.drift_tripwire > 0.0 or self.loss_tripwire > 0.0
+        guard = self._capture(plan) if tripwire else None
+        record = self._execute_round(plan, weights)
+
+        replays = 0
+        quarantined = np.zeros(self.cohort, bool)
+        while tripwire and self._tripped(record):
+            offenders = (self._offending_clients()
+                         & plan.mask & ~quarantined)
+            new_q = quarantined | offenders
+            still_live = (plan.mask & ~new_q).any()
+            if (replays >= self.tripwire_retries or not offenders.any()
+                    or not still_live):
+                warnings.warn(
+                    "tripwire: round %d still exceeds thresholds after %d "
+                    "replay(s) (drift=%.3g loss=%.3g); degrading — keeping "
+                    "the tripped round's result"
+                    % (record["round"], replays,
+                       record["moment_divergence"],
+                       record["mean_final_loss"]))
+                break
+            quarantined = new_q
+            self._rollback(guard)
+            # Quarantined clients drop out entirely: masked, no delay slot,
+            # and their corruption code cleared so the attack operand does
+            # not re-inject NaN into their (now zero-weight) rows.
+            replay_plan = plan._replace(
+                mask=plan.mask & ~quarantined,
+                delays=np.where(quarantined, -1, plan.delays),
+                corrupt=(None if plan.corrupt is None else
+                         np.where(quarantined, 0, plan.corrupt)))
+            record = self._execute_round(replay_plan, weights)
+            replays += 1
+        if tripwire:
+            extra = {"tripwire_replays": replays,
+                     "tripwire_quarantined": int(quarantined.sum())}
+            self.history[-1].update(extra)
+            record.update(extra)
+
+        if (self.snapshot_dir is not None and self.snapshot_every > 0
+                and eng.round_idx % self.snapshot_every == 0):
+            self.snapshot()
+        return record
+
+    def _execute_round(self, plan: CohortPlan,
+                       weights: Optional[np.ndarray]) -> Dict[str, Any]:
+        eng = self.engine
         t = eng.round_idx
-        plan = sample_cohort(self.pcfg, self.cohort, t, self.population)
         stale_metrics = self._merge_due(t)
         gathered = self.store.gather(plan.clients)   # sticky rows (obs/warm)
         batches = self.batches_for(plan.clients, t)
@@ -596,13 +803,18 @@ class PopulationRunner:
             # so this is a live reference, not a copy race).
             prev_global = jax.tree_util.tree_map(
                 lambda x: np.asarray(x, np.float32), eng.global_trainable)
-        metrics = eng.run_round(batches, weights=weights, mask=plan.mask)
+        attack = corruption_multipliers(plan, self.pcfg)
+        metrics = eng.run_round(batches, weights=weights, mask=plan.mask,
+                                attack=attack)
 
         harvest = self._harvest()
+        self._last_harvest = harvest
         scale = self._base_scale()
         w_norm = np.asarray(eng._normalize_weights(weights, self.cohort))
 
         # Stragglers: buffer their factored contribution for the due round.
+        # (Corruption is drawn on-time-only, so every straggler is honest.)
+        evict0 = self.buffer.evictions
         for i in np.nonzero(plan.delays > 0)[0]:
             delay = int(plan.delays[i])
             if eng._factored:
@@ -623,8 +835,12 @@ class PopulationRunner:
                 v_rows=self._rows(harvest.get("v"), i)))
 
         # Scatter: participants + stragglers persist their new sticky rows;
-        # dropped clients keep their previous (possibly cold) rows.
+        # dropped clients keep their previous (possibly cold) rows, and so
+        # do corrupted clients — their harvested rows carry the attacked (or
+        # quarantine-zeroed) uplink, which must not poison the store.
         live = plan.delays >= 0
+        if plan.corrupt is not None:
+            live = live & (plan.corrupt == 0)
         if live.any():
             rows: Dict[str, PyTree] = {}
             if eng._factored:
@@ -663,6 +879,9 @@ class PopulationRunner:
             "moment_divergence": drift,
             "mean_final_loss": float(np.asarray(
                 metrics["local_loss"])[plan.mask, -1].mean()),
+            "corrupted": (0 if plan.corrupt is None
+                          else int((plan.corrupt != 0).sum())),
+            "stale_evicted": self.buffer.evictions - evict0,
             **stale_metrics,
         }
         self.history.append(record)
@@ -671,6 +890,223 @@ class PopulationRunner:
         record["gathered"] = gathered
         record["local_loss"] = metrics["local_loss"]
         return record
+
+    # -- tripwire: capture / detect / rollback / screen --
+    def _capture(self, plan: CohortPlan) -> Dict[str, Any]:
+        """Round-start state for rollback. JAX arrays are immutable and the
+        referenced engine buffers (global/frozen/synced) are never donated,
+        so references suffice; host-side state is copied."""
+        eng = self.engine
+        cap = {"global": eng.global_trainable, "synced": eng.synced_v,
+               "round_idx": eng.round_idx,
+               "entries": list(self.buffer._entries),
+               "evictions": self.buffer.evictions,
+               "history_len": len(self.history),
+               "clients": plan.clients.copy(),
+               "rows": self.store.gather(plan.clients),
+               "last_round": self.store.last_round.copy()}
+        if eng._frozen_mutates():
+            cap["frozen"] = eng.frozen
+        return cap
+
+    def _rollback(self, cap: Dict[str, Any]) -> None:
+        eng = self.engine
+        eng.global_trainable = cap["global"]
+        eng.synced_v = cap["synced"]
+        if "frozen" in cap:
+            eng.frozen = cap["frozen"]
+        eng.round_idx = cap["round_idx"]
+        self.buffer._entries = list(cap["entries"])
+        self.buffer.evictions = cap["evictions"]
+        del self.history[cap["history_len"]:]
+        self.store.scatter(cap["clients"], cap["rows"])
+        self.store.last_round = cap["last_round"].copy()
+
+    def _tripped(self, record: Dict[str, Any]) -> bool:
+        loss = record["mean_final_loss"]
+        drift = record["moment_divergence"]
+        if not (np.isfinite(loss) and np.isfinite(drift)):
+            return True
+        if self.loss_tripwire > 0.0 and loss > self.loss_tripwire:
+            return True
+        return self.drift_tripwire > 0.0 and drift > self.drift_tripwire
+
+    def _offending_clients(self) -> np.ndarray:
+        """Host-side screen of the last harvested uplink, mirroring the
+        in-round quarantine in float64: a client offends when any of its
+        retained buffers are non-finite, or when its factored norm exceeds
+        ``quarantine_zmax`` × the cohort median norm."""
+        h = self._last_harvest
+        if h is None:
+            return np.zeros(self.cohort, bool)
+        finite = np.ones(self.cohort, bool)
+        sq = np.zeros(self.cohort)
+        delta_tree = h["delta"] if "delta" in h else h["trainable"]
+        for tree in (delta_tree, h.get("v")):
+            if tree is None:
+                continue
+            for x in jax.tree_util.tree_leaves(
+                    tree, is_leaf=lambda x: x is None):
+                if x is None:
+                    continue
+                x2 = np.asarray(x, np.float64).reshape(self.cohort, -1)
+                ok = np.isfinite(x2)
+                finite &= ok.all(axis=1)
+                x2 = np.where(ok, x2, 0.0)
+                sq += (x2 * x2).sum(axis=1)
+        norm = np.sqrt(sq)
+        out = ~finite
+        med = np.median(norm[finite]) if finite.any() else 0.0
+        if med > 0.0:
+            out |= norm > self.engine.cfg.quarantine_zmax * med
+        return out
+
+    # -- snapshots: crash-resumable federation state --
+    def _entry_template(self) -> Dict[str, Optional[PyTree]]:
+        """Per-entry restore template matching ``StaleEntry`` array trees."""
+        eng = self.engine
+        if eng._factored:
+            moments = self._galore_shapes()
+            st = jax.eval_shape(lambda: eng.tx.init(eng.global_trainable))
+            b_tree = gal.extract_bases(gal.galore_state_of(st))
+            bases = jax.tree_util.tree_map(
+                lambda x: None if x is None else np.zeros(x.shape,
+                                                          np.float32),
+                b_tree, is_leaf=lambda x: x is None)
+            return {"deltas": moments, "bases": bases, "v_rows": moments}
+        deltas = jax.tree_util.tree_map(
+            lambda x: np.zeros(x.shape, np.float32), eng.global_trainable)
+        row = {"deltas": deltas, "bases": None, "v_rows": None}
+        if eng.spec.optimizer == "galore_adamw":
+            row["v_rows"] = self._galore_shapes()
+        return row
+
+    def snapshot(self, step: Optional[int] = None) -> int:
+        """Persist the full federation state atomically.
+
+        Payload (npz, via :mod:`repro.checkpoint.io`): global trainable,
+        retained per-client buffers (non-finite entries sanitized to 0 —
+        they are rebuilt from the global at round start and must not trip
+        the restore-side corruption check), staleness-buffer entry arrays,
+        the store's round stamps, and synced_v/frozen when live. Scalar
+        metadata (round index, history, entry bookkeeping) goes to a
+        sibling ``fed_<step>.meta.json`` written with the same
+        tmp+rename discipline. Retains ``snapshot_keep`` snapshots.
+        """
+        if self.snapshot_dir is None:
+            raise ValueError("snapshot_dir is not configured")
+        eng = self.engine
+        step = int(eng.round_idx if step is None else step)
+        self.store.flush()
+        eng._ensure_client_buffers(self.cohort)
+        clean = lambda t: jax.tree_util.tree_map(
+            lambda x: None if x is None else np.nan_to_num(
+                np.asarray(x), nan=0.0, posinf=0.0, neginf=0.0),
+            t, is_leaf=lambda x: x is None)
+        payload: Dict[str, Any] = {
+            "global": eng.global_trainable,
+            "client_state": clean(eng._client_state),
+            "client_opt": clean(eng._client_opt),
+            "last_round": self.store.last_round,
+            "entries": [{"deltas": clean(e.deltas),
+                         "bases": clean(e.bases),
+                         "v_rows": clean(e.v_rows)}
+                        for e in self.buffer._entries]}
+        if eng.synced_v is not None:
+            payload["synced_v"] = eng.synced_v
+        if eng._frozen_mutates():
+            payload["frozen"] = eng.frozen
+        ckpt_io.save(self.snapshot_dir, step, payload, name="fed",
+                     keep_last=self.snapshot_keep)
+        meta = {"round_idx": int(eng.round_idx),
+                "history": self.history,
+                "has_synced_v": eng.synced_v is not None,
+                "has_frozen": bool(eng._frozen_mutates()),
+                "buffer_evictions": int(self.buffer.evictions),
+                "entries": [{"client_id": int(e.client_id),
+                             "birth_round": int(e.birth_round),
+                             "due_round": int(e.due_round),
+                             "weight": float(e.weight),
+                             "decay": float(e.decay),
+                             "base_scale": float(e.base_scale),
+                             "has_bases": e.bases is not None,
+                             "has_v": e.v_rows is not None}
+                            for e in self.buffer._entries]}
+        mpath = os.path.join(self.snapshot_dir,
+                             "fed_%08d.meta.json" % step)
+        tmp = mpath + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, mpath)
+        return step
+
+    def restore(self, step: Optional[int] = None) -> int:
+        """Rebuild the federation from a snapshot (latest when ``step`` is
+        None) — the crash-resume path: construct a fresh runner with the
+        same config, then ``restore()``. The checkpoint reader rejects
+        non-finite payloads, so a poisoned snapshot fails loudly here
+        instead of silently resuming corrupted state."""
+        if self.snapshot_dir is None:
+            raise ValueError("snapshot_dir is not configured")
+        if step is None:
+            step = ckpt_io.latest_step(self.snapshot_dir, name="fed")
+            if step is None:
+                raise FileNotFoundError(
+                    "no federation snapshot found in %r" % self.snapshot_dir)
+        step = int(step)
+        mpath = os.path.join(self.snapshot_dir,
+                             "fed_%08d.meta.json" % step)
+        with open(mpath) as f:
+            meta = json.load(f)
+        eng = self.engine
+        eng._ensure_client_buffers(self.cohort)
+        base_entry = self._entry_template()
+        entry_templates = []
+        for info in meta["entries"]:
+            t = dict(base_entry)
+            if not info["has_bases"]:
+                t["bases"] = None
+            if not info["has_v"]:
+                t["v_rows"] = None
+            entry_templates.append(t)
+        template: Dict[str, Any] = {
+            "global": eng.global_trainable,
+            "client_state": eng._client_state,
+            "client_opt": eng._client_opt,
+            # int32 template: round stamps fit comfortably and jnp would
+            # truncate int64 anyway under the default x64-off config.
+            "last_round": self.store.last_round.astype(np.int32),
+            "entries": entry_templates}
+        if meta["has_synced_v"]:
+            template["synced_v"] = (eng.synced_v if eng.synced_v is not None
+                                    else eng._zero_synced_template())
+        if meta["has_frozen"]:
+            template["frozen"] = eng.frozen
+        data = ckpt_io.restore(self.snapshot_dir, step, template, name="fed")
+        eng.global_trainable = data["global"]
+        eng._client_state = data["client_state"]
+        eng._client_opt = data["client_opt"]
+        eng.synced_v = data["synced_v"] if meta["has_synced_v"] else None
+        if meta["has_frozen"]:
+            eng.frozen = data["frozen"]
+        eng.round_idx = int(meta["round_idx"])
+        self.history = list(meta["history"])
+        self.store.last_round = np.asarray(data["last_round"], np.int64)
+        entries = []
+        for info, trees in zip(meta["entries"], data["entries"]):
+            entries.append(StaleEntry(
+                client_id=int(info["client_id"]),
+                birth_round=int(info["birth_round"]),
+                due_round=int(info["due_round"]),
+                weight=float(info["weight"]), decay=float(info["decay"]),
+                base_scale=float(info["base_scale"]),
+                deltas=trees["deltas"],
+                bases=trees["bases"] if info["has_bases"] else None,
+                v_rows=trees["v_rows"] if info["has_v"] else None))
+        self.buffer._entries = entries
+        self.buffer.evictions = int(meta.get("buffer_evictions", 0))
+        self._last_harvest = None
+        return step
 
     def run_rounds(self, k_rounds: int,
                    weights: Optional[np.ndarray] = None) -> Dict[str, Any]:

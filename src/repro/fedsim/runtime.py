@@ -85,7 +85,10 @@ class ShardedFederation:
                  client_chunk: Optional[int] = None,
                  lift_free: Optional[bool] = None,
                  participation: Optional[
-                     pop_lib.ParticipationConfig] = None):
+                     pop_lib.ParticipationConfig] = None,
+                 robust_agg: str = "none", quarantine: bool = False,
+                 quarantine_zmax: float = 6.0, robust_trim: float = 0.2,
+                 robust_iters: int = 8):
         self.cfg = cfg
         self.spec = spec
         self.mesh = mesh
@@ -122,9 +125,19 @@ class ShardedFederation:
         # program; the stacked buffers are donated so round k+1's outputs
         # reuse round k's memory. state_sync=None lowers the legacy 𝒯𝒜-only
         # program used by the eager reference path.
+        # Defense knobs lower INSIDE the round program (steps.
+        # make_fed_round_step): quarantine screens the factored uplink and
+        # folds failures into the zero-weight mask path; robust_agg swaps
+        # 𝒜's weighted mean for a robust factored reduction. Defaults lower
+        # the pre-defense program unchanged; there is no attack-injection
+        # operand in the SPMD round (corruption arrives only as genuinely
+        # corrupted client state — the engine covers injection testing).
         self._step_kwargs = dict(
             factored_sync=factored_sync, factored_clients=factored_clients,
-            client_chunk=client_chunk, lift_free=lift_free)
+            client_chunk=client_chunk, lift_free=lift_free,
+            robust_agg=robust_agg, quarantine=quarantine,
+            quarantine_zmax=quarantine_zmax, robust_trim=robust_trim,
+            robust_iters=robust_iters)
         self._round_core = steps_lib.make_fed_round_step(
             cfg, spec, n_clients,
             state_sync=(state_sync if fused_round else None),

@@ -268,7 +268,12 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
                         factored_clients: bool = True,
                         client_chunk: Optional[int] = None,
                         lift_free: Optional[bool] = None,
-                        exclude_zero_weights: bool = False) -> Callable:
+                        exclude_zero_weights: bool = False,
+                        robust_agg: str = "none",
+                        quarantine: bool = False,
+                        quarantine_zmax: float = 6.0,
+                        robust_trim: float = 0.2,
+                        robust_iters: int = 8) -> Callable:
     """A full federated round (Algorithm 1) as one SPMD program:
 
       broadcast (implicit: clients start from the shared global base) →
@@ -297,9 +302,27 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
     drops the zero-weight clients from the AJIVE joint basis. Kept off by
     default so the unmasked program stays byte-for-byte what it was before
     the participation layer.
+    ``quarantine`` / ``robust_agg`` lower the guarded round variant
+    (mirroring ``core.fed``): after the local phase, every client's factored
+    contribution is screened (non-finite reduction + ``quarantine_zmax`` ×
+    weighted-median norm-outlier test, in factored coordinates) and failures
+    fold into the zero-weight mask path — renormalized out of 𝒜, sanitized
+    stacks, excluded from the AJIVE score Gram; ``robust_agg`` swaps the
+    weighted mean in 𝒜 for a robust reduction
+    (``aggregation.robust_factored_lift`` — heterogeneous-basis 'svd' rounds
+    degrade the coordinate-wise modes to median-norm clipping). Both require
+    the factored client round. All-honest cohorts short-circuit bitwise onto
+    the unguarded math; the defaults lower a program byte-for-byte identical
+    to the pre-defense one. There is no attack-injection operand in the SPMD
+    round — corruption reaches this program only through genuinely corrupted
+    client state (the engine's ``run_round(attack=)`` covers injection).
     """
     tx = make_galore_tx(cfg, spec)
     gcfg = make_galore_cfg(spec)
+    if robust_agg not in agg_lib.ROBUST_MODES:
+        raise ValueError(f"robust_agg={robust_agg!r} not in "
+                         f"{agg_lib.ROBUST_MODES}")
+    guard = quarantine or robust_agg != "none"
     # Factored deltas are exact only while the basis is fixed whenever any
     # R_i ≠ 0, i.e. refreshes only at local step 0 (count ≡ 0 mod τ there).
     factored_ok = (factored_clients
@@ -444,6 +467,22 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
         if use_factored:
             out_d, out_st, losses, base_scales = _local_phase_factored(
                 global_trainable, frozen, opt_states, batches, axes)
+            if guard and quarantine:
+                # In-round quarantine: screen the factored uplink, fold
+                # failures into the zero-weight mask path (sanitized
+                # stacks, renormalized weights, moments zeroed out of the
+                # score Gram). All-pass verdicts leave every operand
+                # bitwise untouched.
+                g_st = gal.galore_state_of(out_st)
+                v_tree = gal.extract_projected_v(g_st)
+                keep = agg_lib.screen_factored_clients(
+                    out_d, v_tree, base_scales, w, zmax=quarantine_zmax)
+                out_d = agg_lib.mask_client_rows(out_d, keep)
+                v_tree = agg_lib.mask_client_rows(v_tree, keep)
+                base_scales = jnp.where(keep, base_scales, 1.0)
+                w = agg_lib.quarantine_weights(w, keep)
+                out_st = gal.replace_galore_state(
+                    out_st, gal.with_projected_v(g_st, v_tree))
             # 𝒜 factored: reduce in projected coordinates (shared seeded
             # basis) or contract per-client lifts ('svd' diverges bases).
             bases = gal.extract_bases(gal.galore_state_of(out_st))
@@ -453,18 +492,20 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
             def one(x, d_stack, b_stack):
                 side = (proj.RIGHT if d_stack.shape[-1] == b_stack.shape[-1]
                         else proj.LEFT)
-                if hetero:
-                    lifted = agg_lib.factored_lift_average_hetero(
-                        d_stack, b_stack, side, w)
-                else:
-                    lifted = agg_lib.factored_lift_average(
-                        d_stack, b_stack[0], side, w)
+                lifted = agg_lib.robust_factored_lift(
+                    d_stack, b_stack, side, w, robust_agg, hetero=hetero,
+                    trim=robust_trim, iters=robust_iters)
                 return (sbar * x.astype(jnp.float32)
                         + lifted).astype(x.dtype)
 
             new_global = jax.tree_util.tree_map(one, global_trainable,
                                                 out_d, bases)
         else:
+            if guard:
+                raise ValueError(
+                    "quarantine/robust_agg require the factored client "
+                    "round (factored_clients with step-0-aligned refreshes "
+                    "and all-target trainables)")
             out_tr, out_st, losses = _local_phase_dense(
                 global_trainable, frozen, opt_states, batches, axes)
             # 𝒜: weighted average over the client axis -> all-reduce on mesh
@@ -474,11 +515,13 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
         if state_sync is not None:
             # 𝒮 in-mesh: the round program returns next-round-ready states;
             # the pre-sync ṽ is consumed internally, never materialized as
-            # an output.
+            # an output. A quarantine-guarded round excludes zero-weight
+            # clients from the joint basis even when the caller didn't ask
+            # for the masked variant (exact no-op on all-positive weights).
             out_st = sync_client_states(
                 out_st, w, n_clients, state_sync, factored=factored_sync,
                 bases_shared=(spec.refresh_mode != "svd"),
-                exclude_zero_weights=exclude_zero_weights)
+                exclude_zero_weights=exclude_zero_weights or quarantine)
             return new_global, out_st, losses, None
         # 𝒮 payload for the host-side filter: projected second moments ṽ
         # (client-stacked, O(n·r))

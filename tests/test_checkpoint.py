@@ -1,8 +1,9 @@
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, restore, save
+from repro.checkpoint import gc_steps, latest_step, restore, save
 
 
 def test_roundtrip(tmp_path):
@@ -61,6 +62,65 @@ def test_latest_step_skips_truncated_and_missing_payloads(tmp_path):
     save(str(tmp_path), 9, tree)
     os.remove(os.path.join(str(tmp_path), "ckpt_00000009.npz"))
     assert latest_step(str(tmp_path)) == 1
+
+
+def test_keep_last_gc_retains_newest_valid(tmp_path):
+    """``save(keep_last=k)`` prunes to the k newest steps with a valid
+    payload (manifest removed alongside)."""
+    import os
+    tree = {"x": jnp.arange(16, dtype=jnp.float32)}
+    for s in (1, 3, 5, 7):
+        save(str(tmp_path), s, tree, keep_last=2)
+    npzs = sorted(f for f in os.listdir(str(tmp_path))
+                  if f.endswith(".npz"))
+    assert npzs == ["ckpt_00000005.npz", "ckpt_00000007.npz"]
+    assert not any(f == "ckpt_00000001.json" or f == "ckpt_00000003.json"
+                   for f in os.listdir(str(tmp_path)))
+    for s in (5, 7):
+        out = restore(str(tmp_path), s, tree)
+        assert jnp.array_equal(out["x"], tree["x"])
+
+
+def test_gc_never_deletes_newest_valid_payload(tmp_path):
+    """Retention must key on *validity*, not recency: when the newest steps
+    are truncated (crash mid-spill), GC keeps the newest RESTORABLE payload
+    and collects the dead newer steps — a dead step can never be restored,
+    so deleting the last valid one instead would strand recovery."""
+    import os
+    tree = {"x": jnp.arange(4096, dtype=jnp.float32)}
+    save(str(tmp_path), 2, tree)
+    for s in (5, 8):
+        p = save(str(tmp_path), s, tree)
+        with open(p, "r+b") as f:
+            f.truncate(os.path.getsize(p) // 2)
+    gc_steps(str(tmp_path), keep_last=1)
+    npzs = sorted(f for f in os.listdir(str(tmp_path))
+                  if f.endswith(".npz"))
+    assert npzs == ["ckpt_00000002.npz"]       # newest VALID survives
+    assert latest_step(str(tmp_path)) == 2
+    out = restore(str(tmp_path), 2, tree)
+    assert jnp.array_equal(out["x"], tree["x"])
+    with pytest.raises(ValueError, match="keep_last"):
+        gc_steps(str(tmp_path), keep_last=0)
+
+
+def test_restore_rejects_nonfinite_payload(tmp_path):
+    """A structurally-valid payload carrying NaN/inf is corrupted state —
+    restore must refuse it instead of feeding poison back into the
+    federation (opt-out via reject_nonfinite=False for forensics)."""
+    tree = {"w": jnp.ones((4,), jnp.float32),
+            "steps": jnp.arange(4, dtype=jnp.int32)}
+    bad = {"w": jnp.asarray([1.0, np.nan, 3.0, np.inf], jnp.float32),
+           "steps": tree["steps"]}
+    save(str(tmp_path), 4, bad)
+    with pytest.raises(ValueError, match="non-finite"):
+        restore(str(tmp_path), 4, tree)
+    out = restore(str(tmp_path), 4, tree, reject_nonfinite=False)
+    assert np.isnan(np.asarray(out["w"])[1])
+    # Finite payloads (including integer leaves) restore untouched.
+    save(str(tmp_path), 6, tree)
+    out = restore(str(tmp_path), 6, tree)
+    assert jnp.array_equal(out["steps"], tree["steps"])
 
 
 def test_restores_namedtuple_state(tmp_path):
