@@ -38,6 +38,16 @@ goes. Acceptance: the C=512 round stays within the recorded budget
 (regression guard, not just a recording), lift-free is no slower than
 transient-lift at the compute-bound cohort shape, buffers stay within 4× the
 old C=8 dense configuration, and factored-vs-dense parity ≤ 1e-4 at C=8.
+
+Batched-bucket 𝒮 + pipelined-scan gates (``scripts/ci.sh --sync-smoke``):
+the stage breakdown's 𝒮 number must stay within ``SYNC_STAGE_BUDGET_S`` at
+the C=64 breakdown cohort (the shape-bucketed vmapped sync replacing the
+per-leaf loop), and the pipelined K-round scan (``pipeline_sync=True``, the
+default — round k's 𝒮 overlapped with round k+1's local phase) must be no
+slower than the sequential oracle at every cohort size, up to
+``PIPE_NOISE_TOL``. Stage timings fence their inputs with
+``block_until_ready`` before the clock read (async dispatch otherwise
+charges upstream compute to the wrong stage).
 """
 from __future__ import annotations
 
@@ -162,6 +172,20 @@ COHORT_CHUNK = 32       # B: dense transient working set bounded by 32 clients
 # PR 4 transient-lift baseline measured 6.85 s — the lift-free round must
 # never regress past it. Update deliberately when the workload changes.
 COHORT_CMAX_ROUND_S_BUDGET = 6.85
+# 𝒮-stage budget at the C=64 breakdown point: the batched-bucket sync must
+# hold the per-round 𝒮 under 10 ms (pre-bucketing per-leaf loop: ~26 ms).
+SYNC_STAGE_BUDGET_S = 0.010
+PIPE_ROUNDS = 4         # K floor for the pipelined-vs-sequential comparison
+# Small cohorts run more rounds per timed scan (K = max(PIPE_ROUNDS,
+# PIPE_SCAN_STEPS // C)) so every measurement covers ≳100 ms of work — a
+# 4-round C=8 scan is ~13 ms and single-digit-percent scheduler noise on
+# it dwarfs the effect being gated.
+PIPE_SCAN_STEPS = 512
+PIPE_REPS = 5           # interleaved best-of reps per schedule
+# Pipelined ≥ sequential up to scheduler noise: per-round scan times on this
+# shared CPU jitter a few percent between best-of runs even for the *same*
+# program, so the gate allows 3% before calling a regression.
+PIPE_NOISE_TOL = 1.03
 
 
 def _tree_maxerr(a, b):
@@ -171,11 +195,18 @@ def _tree_maxerr(a, b):
                                jax.tree_util.tree_leaves(b)))
 
 
-def _stage_breakdown(eng, c, batches, w=None, reps=2):
+def _stage_breakdown(eng, c, batches, w=None, reps=12):
     """Per-stage wall-clock of the factored round: separately jitted
     InitState+local 𝒯, aggregation 𝒜, and state-sync 𝒮 (their sum exceeds
     the fused round, which overlaps dispatch — the split localizes where
-    time goes, it does not replace the fused number)."""
+    time goes, it does not replace the fused number).
+
+    Every rep fences the stage *inputs* with ``block_until_ready`` before
+    reading the clock: JAX dispatch is async, so without the fence a stage
+    timed right after producing its inputs silently absorbs the tail of the
+    upstream stage's compute (the old numbers charged part of 𝒯 to 𝒜/𝒮).
+    Best-of-``reps`` because the r×r stage times are single-digit ms — small
+    enough for scheduler noise to dominate a mean on a contended host."""
     w = jnp.full((c,), 1.0 / c) if w is None else w
     ridx = jnp.asarray(1, jnp.int32)      # steady state: past adaptive r0
 
@@ -203,7 +234,8 @@ def _stage_breakdown(eng, c, batches, w=None, reps=2):
         jax.block_until_ready(fn(*args))                  # compile
         best = float("inf")
         for _ in range(reps):
-            t0 = time.perf_counter()
+            jax.block_until_ready(args)     # fence inputs: async dispatch
+            t0 = time.perf_counter()        # must not leak upstream compute
             jax.block_until_ready(fn(*args))
             best = min(best, time.perf_counter() - t0)
         return best
@@ -284,18 +316,64 @@ def bench_cohort(clients=COHORT_CLIENTS, rounds_timed=2):
     # bounds the transient path's per-client dense working set).
     cmax = max(clients)
     bc = min(64, cmax)
+    sync_bc_s = None
     for lift_free in (True, False):
         eng = make(factored=True, lift_free=lift_free)
         eng.run_round(batches(0, bc, local_steps, b))     # warm buffers
         stages = _stage_breakdown(eng, bc,
                                   batches(1, bc, local_steps, b))
         model = "liftfree" if lift_free else "transient_lift"
+        if lift_free:
+            sync_bc_s = stages["sync_s"]
         rows.append({"engine": "FedEngine", "sweep": "stage_breakdown",
                      "clients": bc, "client_model": model, **stages})
         emit(f"round_e2e/stages_c{bc}_{model}",
              stages["local_s"] * 1e6,
              f"agg={stages['agg_s'] * 1e6:.0f}us "
              f"sync={stages['sync_s'] * 1e6:.0f}us")
+
+    # Pipelined vs sequential K-round scan at every cohort size: the
+    # one-round-deep schedule must never cost throughput (it is the same
+    # round math re-associated; see core.fed). Both engines are compiled
+    # first and the timed reps interleave pipelined/sequential, so slow
+    # machine drift (the shared host's scheduler and cache state wander on
+    # the seconds scale) hits both sides equally instead of biasing
+    # whichever ran second; best-of over whole scans.
+    pipe_s, seq_s, pipe_k = {}, {}, {}
+    for c in clients:
+        chunk = min(COHORT_CHUNK, c)
+        k_rounds = max(PIPE_ROUNDS, PIPE_SCAN_STEPS // c)
+        pipe_k[c] = k_rounds
+        rb = batches(0, c, local_steps, b, k_rounds=k_rounds)
+        engines = {}
+        for pipelined in (True, False):
+            eng = FedEngine(FedConfig(method="fedgalore", rank=COHORT_RANK,
+                                      lr=1e-2, local_steps=local_steps,
+                                      factored_clients=True,
+                                      client_chunk=chunk,
+                                      pipeline_sync=pipelined),
+                            loss, params)
+            eng.run_rounds(rb)                            # compile
+            engines[pipelined] = eng
+
+        def scan_once(eng, rb=rb, k_rounds=k_rounds):
+            t0 = time.perf_counter()
+            eng.run_rounds(rb)
+            return (time.perf_counter() - t0) / k_rounds
+
+        best = {True: float("inf"), False: float("inf")}
+        for _ in range(PIPE_REPS):
+            for pipelined in (True, False):
+                best[pipelined] = min(best[pipelined],
+                                      scan_once(engines[pipelined]))
+        pipe_s[c], seq_s[c] = best[True], best[False]
+        for pipelined in (True, False):
+            rows.append({"engine": "FedEngine", "sweep": "pipeline",
+                         "clients": c, "chunk": chunk, "rounds": k_rounds,
+                         "pipelined": pipelined, "round_s": best[pipelined]})
+        emit(f"round_e2e/pipeline_c{c}", pipe_s[c] * 1e6,
+             f"sequential={seq_s[c] * 1e6:.0f}us "
+             f"speedup={seq_s[c] / pipe_s[c]:.2f}x")
 
     cmax_bytes = next(r["client_buffer_bytes"] for r in rows
                       if r.get("clients") == cmax
@@ -315,6 +393,19 @@ def bench_cohort(clients=COHORT_CLIENTS, rounds_timed=2):
         "cohort_buffer_ratio_cmax_vs_c8_dense": cmax_bytes / dense8_bytes,
         "factored_parity_c8": parity,
         "liftfree_parity_c8": parity_lf_tr,
+        # batched-bucket 𝒮 + pipelined-scan gates (see module constants)
+        "sync_stage_clients": bc,
+        "sync_stage_s": sync_bc_s,
+        "sync_stage_budget_s": SYNC_STAGE_BUDGET_S,
+        "sync_stage_within_budget": sync_bc_s <= SYNC_STAGE_BUDGET_S,
+        "pipeline_rounds_by_clients": {str(c): pipe_k[c] for c in clients},
+        "pipeline_noise_tol": PIPE_NOISE_TOL,
+        "pipeline_round_s_by_clients": {str(c): pipe_s[c] for c in clients},
+        "sequential_round_s_by_clients": {str(c): seq_s[c] for c in clients},
+        "pipeline_speedup_by_clients": {
+            str(c): seq_s[c] / pipe_s[c] for c in clients},
+        "pipelined_ge_sequential": all(
+            pipe_s[c] <= seq_s[c] * PIPE_NOISE_TOL for c in clients),
     }
 
 

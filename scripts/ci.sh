@@ -19,8 +19,17 @@
 #                                      # honest bit-identity, NaN
 #                                      # containment, and bounded attack
 #                                      # degradation
-# Dev-only deps (pytest, hypothesis) are listed in requirements-dev.txt;
-# tests that need hypothesis self-skip when it is absent.
+#        scripts/ci.sh --sync-smoke    # batched-bucket 𝒮 + pipelined-scan
+#                                      # leg: runs the sync parity suites
+#                                      # (with a coverage floor on
+#                                      # state_sync/ajive when pytest-cov is
+#                                      # installed), then gates the 𝒮-stage
+#                                      # budget and pipelined ≥ sequential
+#                                      # keys on BENCH_round_e2e.json
+# Dev-only deps (pytest, hypothesis, pytest-cov) are listed in
+# requirements-dev.txt; tests that need hypothesis self-skip when it is
+# absent, and the --sync-smoke coverage floor downgrades to plain pytest
+# without pytest-cov.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -67,6 +76,50 @@ assert acc["cohort_cmax_within_budget"], (
 assert acc["liftfree_speedup_cmax"] >= 1.0, (
     f"lift-free round slower than transient-lift at C={acc['cohort_cmax']}: "
     f"{acc['liftfree_speedup_cmax']:.2f}x")
+EOF
+    exit 0
+fi
+
+if [[ "${1:-}" == "--sync-smoke" ]]; then
+    shift
+    # Sync parity subset: bucketed 𝒮 ≡ per-leaf, pipelined ≡ sequential,
+    # batched-eigh kernel vs LAPACK. pytest-cov (when installed) enforces a
+    # line-coverage floor on the two modules this suite locks in.
+    COV_ARGS=()
+    if PYTHONPATH=src python -c "import pytest_cov" 2>/dev/null; then
+        COV_ARGS=(--cov=repro.core.state_sync --cov=repro.core.ajive
+                  --cov-report=term --cov-fail-under=80)
+    else
+        echo "pytest-cov not installed — sync parity runs without the" \
+             "coverage floor"
+    fi
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        ${COV_ARGS[@]+"${COV_ARGS[@]}"} \
+        tests/test_sync_batched.py tests/test_batched_eigh.py
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m \
+        benchmarks.bench_round_e2e --smoke --no-runtime \
+        --out BENCH_round_e2e.json "$@"
+    python - <<'EOF'
+import json
+acc = json.load(open("BENCH_round_e2e.json"))["acceptance"]
+keys = {k: acc[k] for k in ("sync_stage_clients", "sync_stage_s",
+                            "sync_stage_budget_s",
+                            "sync_stage_within_budget",
+                            "pipeline_speedup_by_clients",
+                            "pipelined_ge_sequential")}
+print("sync acceptance:", json.dumps(keys, indent=1))
+# Perf gates: the batched-bucket 𝒮 stage stays within its budget at the
+# breakdown cohort, and the pipelined K-round scan is no slower than the
+# sequential oracle (up to the recorded scheduler-noise tolerance) at
+# every cohort size.
+assert acc["sync_stage_within_budget"], (
+    f"S stage at C={acc['sync_stage_clients']} over budget: "
+    f"{acc['sync_stage_s'] * 1e3:.2f}ms > "
+    f"{acc['sync_stage_budget_s'] * 1e3:.0f}ms")
+assert acc["pipelined_ge_sequential"], (
+    "pipelined scan slower than sequential beyond the "
+    f"{acc['pipeline_noise_tol']:.2f}x noise tolerance: "
+    f"{json.dumps(acc['pipeline_speedup_by_clients'])}")
 EOF
     exit 0
 fi

@@ -186,6 +186,20 @@ class FedConfig:
     quarantine_zmax: float = 6.0
     robust_trim: float = 0.2
     robust_iters: int = 8
+    # 𝒮 execution shape (state_sync / ajive module docstrings). bucketed_sync
+    # groups shape-identical leaves into one vmapped sync program per bucket
+    # (batched r×r eigh, kernel-routed on TPU); False keeps the per-leaf loop
+    # as the parity oracle. pipeline_sync makes the scan-over-rounds drivers
+    # one-round-deep software pipelines: round k's 𝒮 is deferred into round
+    # k+1's body (where it only gates the first optimizer-moment read, so it
+    # overlaps the gradient work of the next local phase) with an epilogue
+    # sync after the scan — numerically the SAME program as the sequential
+    # schedule (each round still consumes exactly round k-1's synced
+    # moments), re-associated for overlap; False keeps the strictly
+    # sequential scan body as the timing/parity oracle. Single-round
+    # :meth:`FedEngine.run_round` dispatches are always sequential.
+    bucketed_sync: bool = True
+    pipeline_sync: bool = True
 
 
 # ------------------------------------------------------------ trainables ----
@@ -314,6 +328,9 @@ class FedEngine:
                 "and the robust reductions run on rank-r factored stacks")
         self._round_guard_jit = None
         self._rounds_scan_guard_jit = None
+        # Lazy zero (dim, r) basis-shape donor for the pipelined scans'
+        # slim pending sync (values never read).
+        self._basis_template_tree = None
 
     # ----------------------------------------------------------- optimizer --
     def _make_tx(self):
@@ -585,59 +602,223 @@ class FedEngine:
         return {"local_loss": losses,                      # (K, C, T)
                 "mean_final_loss": float(jnp.mean(losses[-1, :, -1]))}
 
-    def _build_rounds_scan(self, exclude_zero: bool, guard: bool = False):
+    def _build_rounds_scan(self, exclude_zero: bool, guard: bool = False,
+                           pipelined: bool = False):
         """jit a scan-over-rounds driver. Unmasked: one weight vector closed
         into every round (scan-invariant). Masked (``exclude_zero``): one
         effective weight vector per round rides the xs, and 𝒮 excludes
         zero-weight clients from the joint-basis estimate. ``guard`` runs
         every round through the quarantine/robust-𝒜 program (unit attack —
-        per-round injected attacks don't ride the scan)."""
+        per-round injected attacks don't ride the scan).
+
+        ``pipelined`` (``FedConfig.pipeline_sync`` with a syncing method) is
+        the one-round-deep software pipeline: every round *defers* its 𝒮
+        install by returning the slim pending payload ``(tree, w_eff)``
+        (:meth:`_slim_payload` — protocol-aware: the weighted-mean
+        protocols reduce in-body and carry the small synced tree, ajive
+        carries the per-client projected-moment stacks its joint basis
+        needs), which the next round's body drains at its
+        top (:meth:`_sync_pending`); a post-scan epilogue drains the last
+        round. Round k+1 still consumes exactly round k's synced moments —
+        the schedule is numerically the sequential program, re-associated
+        so the deferred eigh chain only gates the *first optimizer-moment
+        read* of the next local phase (the gradient work before it is
+        independent and free to overlap). The carry stays slim: the
+        per-client basis stacks never ride the scan boundary — when the
+        call's first round may hold heterogeneous bases (adaptive round 0),
+        that one round runs its transfer-Gram 𝒮 inline inside its own body
+        and parks the small synced tree in a carried slot instead. Both
+        schedules run as one uniform scan of the same length (splitting
+        rounds across scans of different lengths changes XLA's loop
+        compilation and costs bit-parity with the oracle). The sequential
+        body survives under ``pipeline_sync=False`` as the timing/parity
+        oracle."""
         frozen_mutates = self._frozen_mutates()
+        if pipelined:
+            # Build the slim-sync basis template eagerly: materialized under
+            # an active trace it would cache tracers (omnistaging) instead
+            # of the concrete scan-invariant constant.
+            self._basis_template()
 
         def scan_rounds(global_tr, frozen, synced_v, round_idx, batches, w):
             # frozen rides in the carry only for the lift aggregations
             # that rewrite it; otherwise it is scan-invariant (closed
             # over by the body — no per-iteration copy).
-            def body(carry, xs):
-                round_b, w_r = xs if exclude_zero else (xs, w)
-                if frozen_mutates:
-                    g_tr, fz, sv, ridx = carry
-                else:
-                    (g_tr, sv, ridx), fz = carry, frozen
+            k_rounds = jax.tree_util.tree_leaves(batches)[0].shape[0]
+            xs = (batches, w) if exclude_zero else batches
+
+            def run_round(g_tr, fz, sv, ridx, round_b, w_r, skip):
                 kw = {}
                 if guard:
                     kc = jax.tree_util.tree_leaves(round_b)[0].shape[0]
                     kw["attack"] = jnp.ones((kc,), jnp.float32)
-                _, _, g_tr, fz, sv, losses = self._round_core(
+                _, _, g_tr, fz, out_sv, losses = self._round_core(
                     g_tr, fz, sv, ridx, round_b, w_r,
-                    exclude_zero=exclude_zero, **kw)
+                    exclude_zero=exclude_zero, skip_sync=skip, **kw)
+                return g_tr, fz, out_sv, losses
+
+            def seq_body(carry, x):
+                round_b, w_r = x if exclude_zero else (x, w)
+                if frozen_mutates:
+                    g_tr, fz, sv, ridx = carry
+                else:
+                    (g_tr, sv, ridx), fz = carry, frozen
+                g_tr, fz, sv, losses = run_round(
+                    g_tr, fz, sv, ridx, round_b, w_r, skip=False)
                 new_carry = ((g_tr, fz, sv, ridx + 1) if frozen_mutates
                              else (g_tr, sv, ridx + 1))
                 return new_carry, losses
+
             carry0 = ((global_tr, frozen, synced_v, round_idx)
                       if frozen_mutates
                       else (global_tr, synced_v, round_idx))
-            xs = (batches, w) if exclude_zero else batches
-            carry, losses = jax.lax.scan(body, carry0, xs)
+            if not pipelined:
+                return jax.lax.scan(seq_body, carry0, xs)
+
+            # One uniform scan for the pipelined schedule too: the bodies
+            # differ from seq_body only around 𝒮, so the local phases
+            # compile in-loop exactly as the sequential oracle's do
+            # (splitting rounds across scans of different lengths changes
+            # XLA's loop compilation and costs bit-parity).
+            # hetero0: the call's first round may hold heterogeneous bases
+            # (adaptive refresh) AND the payload defers per-client stacks
+            # whose drain is shared-basis-only — that round must sync
+            # inline into a carried slot. The weighted-mean protocols'
+            # payload is the fully synced tree (round-0 cond included), so
+            # they never need the slot.
+            hetero0 = (self.galore_cfg.adaptive_steps > 0
+                       and self.galore_cfg.refresh_mode != "random"
+                       and not self._slim_reduces_in_body())
+            k_clients = jax.tree_util.tree_leaves(batches)[0].shape[1]
+
+            def pipe_body(carry, x):
+                round_b, w_r = x if exclude_zero else (x, w)
+                if frozen_mutates:
+                    if hetero0:
+                        g_tr, fz, pend, sv0, ridx = carry
+                    else:
+                        g_tr, fz, pend, ridx = carry
+                else:
+                    fz = frozen
+                    if hetero0:
+                        g_tr, pend, sv0, ridx = carry
+                    else:
+                        g_tr, pend, ridx = carry
+                pv, pw = pend
+
+                def drain(_):
+                    # Drain the previous round's slim pending payload here,
+                    # at the top of this round's body, so its eigh chain
+                    # sits adjacent to this round's independent gradient
+                    # work. The first round of the call adopts the entry
+                    # synced_v (outer cond); under hetero0 the second round
+                    # adopts the first's inline sv0 instead (its bases may
+                    # have diverged — the slim shared drain doesn't apply).
+                    if not hetero0:
+                        return self._sync_pending(pv, pw, exclude_zero)
+                    return jax.lax.cond(
+                        ridx == round_idx + 1, lambda _: sv0,
+                        lambda _: self._sync_pending(pv, pw, exclude_zero),
+                        operand=None)
+
+                sv = jax.lax.cond(ridx == round_idx, lambda _: synced_v,
+                                  drain, operand=None)
+                kw = {}
+                if guard:
+                    kc = jax.tree_util.tree_leaves(round_b)[0].shape[0]
+                    kw["attack"] = jnp.ones((kc,), jnp.float32)
+                _, out_opt, g_tr, fz, pend_new, losses = self._round_core(
+                    g_tr, fz, sv, ridx, round_b, w_r,
+                    exclude_zero=exclude_zero, skip_sync=True, **kw)
+                if hetero0:
+                    def inline0(_):
+                        # Possibly-heterogeneous first round of the call:
+                        # run its transfer-Gram-capable 𝒮 inline (post-guard
+                        # effective weights ride pend_new) — the per-client
+                        # basis stacks never enter the carry.
+                        v_t, b_t = self._sync_uplink(out_opt)
+                        return self._sync_states_from_uplink(
+                            v_t, b_t, pend_new[1], ridx, exclude_zero)
+                    sv0 = jax.lax.cond(ridx == round_idx, inline0,
+                                       lambda _: sv0, operand=None)
+                    new_carry = ((g_tr, fz, pend_new, sv0, ridx + 1)
+                                 if frozen_mutates
+                                 else (g_tr, pend_new, sv0, ridx + 1))
+                else:
+                    new_carry = ((g_tr, fz, pend_new, ridx + 1)
+                                 if frozen_mutates
+                                 else (g_tr, pend_new, ridx + 1))
+                return new_carry, losses
+
+            pend_0 = self._zero_slim_template(k_clients)
+            if hetero0:
+                slots = (pend_0, self._zero_synced_template())
+            else:
+                slots = (pend_0,)
+            carry0 = ((global_tr, frozen) + slots + (round_idx,)
+                      if frozen_mutates
+                      else (global_tr,) + slots + (round_idx,))
+            carry, losses = jax.lax.scan(pipe_body, carry0, xs)
+            if frozen_mutates:
+                g_tr, fz = carry[0], carry[1]
+                rest = carry[2:]
+            else:
+                g_tr, fz = carry[0], frozen
+                rest = carry[1:]
+            pend, ridx = rest[0], rest[-1]
+            # Epilogue: drain the last round's pending payload so the
+            # returned carry matches the sequential schedule
+            # state-for-state. A single-round hetero0 call never deferred
+            # past its inline sv0.
+            if hetero0 and k_rounds == 1:
+                sv = rest[1]
+            else:
+                pv, pw = pend
+                sv = self._sync_pending(pv, pw, exclude_zero)
+            carry = ((g_tr, fz, sv, ridx) if frozen_mutates
+                     else (g_tr, sv, ridx))
             return carry, losses
         return jax.jit(scan_rounds)
+
+    def _zero_slim_template(self, k_clients: int):
+        """Zero-filled slim pending payload ``(tree, w)`` for ``k_clients``
+        — the pipelined scan's initial pending slot (shape donor only; the
+        first iteration adopts the entry synced_v instead of draining it).
+        The tree matches :meth:`_slim_payload`: reduced (no client axis)
+        for the weighted-mean protocols, (C, ·, r) stacks for ajive."""
+        w0 = jnp.zeros((k_clients,), jnp.float32)
+        if self._slim_reduces_in_body():
+            return (self._zero_synced_template(), w0)
+        st = jax.eval_shape(lambda: self.tx.init(self.global_trainable))
+        v = gal.extract_projected_v(gal.galore_state_of(st))
+        return (jax.tree_util.tree_map(
+                    lambda x: None if x is None else jnp.zeros(
+                        (k_clients,) + x.shape, x.dtype),
+                    v, is_leaf=lambda x: x is None),
+                w0)
+
+    def _pipeline_rounds(self) -> bool:
+        """Pipelined scan drivers apply when the method syncs at all and the
+        config keeps the (default) pipelined schedule."""
+        return self.cfg.pipeline_sync and self._method_syncs()
 
     def _rounds_scan_jitted(self):
         if self._rounds_scan_jit is None:
             self._rounds_scan_jit = self._build_rounds_scan(
-                exclude_zero=False)
+                exclude_zero=False, pipelined=self._pipeline_rounds())
         return self._rounds_scan_jit
 
     def _rounds_scan_masked_jitted(self):
         if self._rounds_scan_masked_jit is None:
             self._rounds_scan_masked_jit = self._build_rounds_scan(
-                exclude_zero=True)
+                exclude_zero=True, pipelined=self._pipeline_rounds())
         return self._rounds_scan_masked_jit
 
     def _rounds_scan_guard_jitted(self):
         if self._rounds_scan_guard_jit is None:
             self._rounds_scan_guard_jit = self._build_rounds_scan(
-                exclude_zero=True, guard=True)
+                exclude_zero=True, guard=True,
+                pipelined=self._pipeline_rounds())
         return self._rounds_scan_guard_jit
 
     # ------------------------------------------------- fused round program --
@@ -840,7 +1021,7 @@ class FedEngine:
 
     def _round_core(self, global_trainable, frozen, synced_v, round_idx,
                     client_batches, w, exclude_zero: bool = False,
-                    attack=None):
+                    attack=None, skip_sync: bool = False):
         """The whole federated round as a pure function: InitState → T local
         steps (vmapped clients, streamed over cohort chunks) → 𝒜 → factored
         𝒮. Shared by the per-round jitted program and the scan-over-rounds
@@ -861,7 +1042,20 @@ class FedEngine:
         ``attack`` (guarded variant only) is the (C,) per-client corruption
         multiplier injected after the local phase; its presence also arms
         the quarantine screen and robust 𝒜 per the config
-        (:meth:`_apply_guard`)."""
+        (:meth:`_apply_guard`).
+
+        ``skip_sync`` is the pipelined-scan building block: instead of
+        installing 𝒮's result here, the ``new_synced`` slot returns the
+        round's *slim* pending payload ``(tree, w_eff)`` (see
+        :meth:`_slim_payload` — the reduced synced tree for the
+        weighted-mean protocols, the projected-moment stacks for ajive,
+        plus the post-guard effective weights) for the caller to drain at
+        the top of the next round's body (or in the post-scan epilogue)
+        via :meth:`_sync_pending`. The slim payload is shared-basis-only
+        (no per-client basis stacks ride the scan carry); the possibly
+        heterogeneous adaptive round 0 is handled by the pipelined caller
+        syncing that round inline from the full uplink. Same math,
+        re-associated across the round boundary."""
         if attack is not None and not self._factored:
             raise ValueError("the guarded round requires factored clients")
         k_clients = jax.tree_util.tree_leaves(client_batches)[0].shape[0]
@@ -925,8 +1119,12 @@ class FedEngine:
             new_global = self._aggregate_factored(
                 global_trainable, out_d, out_opt, scales, w, round_idx,
                 robust=robust)
-            new_synced = self._sync_states_pure(out_opt, w, round_idx,
-                                                exclude_zero)
+            if skip_sync:
+                new_synced = (self._slim_payload(out_opt, w, round_idx,
+                                                 exclude_zero), w)
+            else:
+                new_synced = self._sync_states_pure(out_opt, w, round_idx,
+                                                    exclude_zero)
             return out_d, out_opt, new_global, frozen, new_synced, losses
 
         stacked = jax.tree_util.tree_map(
@@ -941,8 +1139,12 @@ class FedEngine:
         out_tr, out_opt, losses = stream(local_fn, client_batches)
         new_global, new_frozen = self._aggregate_pure(out_tr, w, frozen,
                                                       round_idx)
-        new_synced = self._sync_states_pure(out_opt, w, round_idx,
-                                            exclude_zero)
+        if skip_sync:
+            new_synced = (self._slim_payload(out_opt, w, round_idx,
+                                             exclude_zero), w)
+        else:
+            new_synced = self._sync_states_pure(out_opt, w, round_idx,
+                                                exclude_zero)
         return out_tr, out_opt, new_global, new_frozen, new_synced, losses
 
     def _stack_deltas0(self, st0, n: int):
@@ -1097,23 +1299,95 @@ class FedEngine:
                            and self.galore_cfg.refresh_mode != "random")
         return not round0_adaptive
 
-    def _sync_blocks(self, stacked_opt_states, block_fn):
-        """Map ``block_fn(v_stack, b_stack, side, rank)`` over the adapted
-        blocks of the client-stacked optimizer states."""
+    def _sync_uplink(self, stacked_opt_states):
+        """The 𝒮 input payload of a round: (projected-ṽ tree, basis tree)
+        extracted from the client-stacked optimizer states — O(C·r·dim),
+        the factored uplink, never the full optimizer state."""
         g_stack = gal.galore_state_of(stacked_opt_states)
-        v_stack_tree = gal.extract_projected_v(g_stack)     # leaves (K, ., r)
-        basis_tree = gal.extract_bases(g_stack)             # leaves (K, dim, r)
+        return (gal.extract_projected_v(g_stack),    # leaves (K, ., r)
+                gal.extract_bases(g_stack))          # leaves (K, dim, r)
+
+    def _slim_uplink(self, stacked_opt_states):
+        """The shared-basis 𝒮 input payload — the projected-ṽ tree alone.
+        This is what a pipelined scan carries between rounds: past the
+        (possibly heterogeneous) adaptive round 0 every client holds the
+        identical seeded basis, so the per-client basis stacks contribute
+        nothing to 𝒮 and carrying them through the scan boundary is pure
+        copy traffic. Shapes ride via :meth:`_basis_template`."""
+        return gal.extract_projected_v(gal.galore_state_of(stacked_opt_states))
+
+    def _slim_reduces_in_body(self) -> bool:
+        """Whether the pipelined payload is the already-reduced synced tree.
+
+        For the shared-basis weighted-mean protocols — 'avg', and 'avg_svd',
+        whose rank-r re-projection is the identity on rank-≤r lifts — the
+        whole 𝒮 is one fused ``einsum('k,k...->...')``: there is no
+        spectral tail worth deferring, and carrying the (C, ·, r)
+        per-client stacks across the scan boundary just to average them
+        later is pure carry traffic (≈1 ms/round at C=512). So those
+        protocols sync fully in-body (including the adaptive round-0
+        hetero cond, exactly as the sequential body does): the pending
+        slot holds the same small synced tree the sequential carry does,
+        and the drain is a passthrough — only the install is
+        re-associated across the round boundary. Only 'ajive' — whose
+        joint-basis estimate needs the full per-client score stacks —
+        defers the slim uplink."""
+        return self.spec.state_sync in ("avg", "avg_svd")
+
+    def _slim_payload(self, stacked_opt_states, w, round_idx,
+                      exclude_zero: bool):
+        """The ``skip_sync`` pending payload for one round: the fully
+        synced tree for the weighted-mean protocols (via the normal
+        :meth:`_sync_states_pure` — its internal round-0 cond covers the
+        heterogeneous adaptive case, so the pipelined body does exactly
+        the sequential body's sync work and only the *install* crosses
+        the round boundary), the per-client projected-ṽ stacks for ajive
+        (see :meth:`_slim_reduces_in_body`)."""
+        if self._slim_reduces_in_body():
+            return self._sync_states_pure(stacked_opt_states, w, round_idx,
+                                          exclude_zero)
+        return self._slim_uplink(stacked_opt_states)
+
+    def _basis_template(self):
+        """Zero-filled single-client basis tree (leaves ``(dim, r)``) —
+        the shape/rank donor for :meth:`_sync_pending`. Scan-invariant
+        (closed over, never carried); values are never read."""
+        if self._basis_template_tree is None:
+            st = jax.eval_shape(lambda: self.tx.init(self.global_trainable))
+            b = gal.extract_bases(gal.galore_state_of(st))
+            self._basis_template_tree = jax.tree_util.tree_map(
+                lambda x: None if x is None else jnp.zeros(x.shape, x.dtype),
+                b, is_leaf=lambda x: x is None)
+        return self._basis_template_tree
+
+    def _sync_pending(self, v_tree, w, exclude_zero: bool = False):
+        """Drain one slim pending payload (see :meth:`_slim_payload`):
+        passthrough for the weighted-mean protocols (fully synced
+        in-body, any round), shared-basis factored 𝒮 on the carried
+        projected-moment stacks for ajive — where it is only valid for
+        rounds ≥ 1 of a scan: the adaptive round 0 (diverged bases)
+        syncs inline in its own body into the carried slot."""
+        if self._slim_reduces_in_body():
+            return v_tree
+        return self._sync_states_from_uplink(
+            v_tree, self._basis_template(), w, None, exclude_zero,
+            shared_only=True)
+
+    def _sync_blocks(self, v_stack_tree, basis_tree, block_fn,
+                     bucketed: bool = False):
+        """Map ``block_fn(v_stack, b_stack, side, rank)`` over the adapted
+        blocks; ``bucketed`` groups shape-identical leaves into one vmapped
+        program per bucket (`state_sync.map_sync_leaves`)."""
         vs, treedef = jax.tree_util.tree_flatten(v_stack_tree,
                                                  is_leaf=lambda x: x is None)
         bs = jax.tree_util.tree_leaves(basis_tree, is_leaf=lambda x: x is None)
-        synced = []
-        for v_stack, b_stack in zip(vs, bs):
-            if v_stack is None:
-                synced.append(None)
-                continue
+
+        def leaf_fn(v_stack, b_stack):
             rank = b_stack.shape[-1]
             side = proj.RIGHT if v_stack.shape[-1] == rank else proj.LEFT
-            synced.append(block_fn(v_stack, b_stack, side, rank))
+            return block_fn(v_stack, b_stack, side, rank)
+
+        synced = sync_lib.map_sync_leaves(leaf_fn, vs, bs, bucketed=bucketed)
         return jax.tree_util.tree_unflatten(treedef, synced)
 
     def _sync_states_pure(self, stacked_opt_states, w, round_idx,
@@ -1127,8 +1401,22 @@ class FedEngine:
         round) drops zero-weight clients from the AJIVE joint basis."""
         if not self._method_syncs():
             return None
+        v_tree, b_tree = self._sync_uplink(stacked_opt_states)
+        return self._sync_states_from_uplink(v_tree, b_tree, w, round_idx,
+                                             exclude_zero)
+
+    def _sync_states_from_uplink(self, v_stack_tree, basis_tree, w, round_idx,
+                                 exclude_zero: bool = False,
+                                 shared_only: bool = False):
+        """𝒮 on an extracted uplink payload (see :meth:`_sync_uplink`) —
+        shared with the pipelined scan drivers, which sync the *previous*
+        round's carried payload at the top of the next round's body.
+        ``shared_only`` statically drops the adaptive round-0 hetero branch
+        (callers guarantee round ≥ 1); ``basis_tree`` then only donates
+        per-leaf rank/side shapes and may be a single-client template."""
         protocol = self.spec.state_sync
-        round0_hetero_possible = (self.galore_cfg.adaptive_steps > 0
+        round0_hetero_possible = (not shared_only
+                                  and self.galore_cfg.adaptive_steps > 0
                                   and self.galore_cfg.refresh_mode != "random")
 
         def sync_block(v_stack, b_stack, side, rank):
@@ -1151,7 +1439,8 @@ class FedEngine:
                 return shared(None)
             return jax.lax.cond(round_idx == 0, hetero, shared, operand=None)
 
-        return self._sync_blocks(stacked_opt_states, sync_block)
+        return self._sync_blocks(v_stack_tree, basis_tree, sync_block,
+                                 bucketed=self.cfg.bucketed_sync)
 
     def _sync_states_eager(self, stacked_opt_states, w):
         """Reference 𝒮 for the eager round: the factored shared-basis path
@@ -1188,7 +1477,8 @@ class FedEngine:
                 return jax.vmap(sync_one, in_axes=(1, 1))(v_stack, b_stack)
             return sync_one(v_stack, b_stack)
 
-        return self._sync_blocks(stacked_opt_states, sync_block)
+        v_tree, b_tree = self._sync_uplink(stacked_opt_states)
+        return self._sync_blocks(v_tree, b_tree, sync_block)
 
     # ------------------------------------------------------------- helpers --
     def global_params(self) -> PyTree:

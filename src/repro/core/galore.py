@@ -432,6 +432,24 @@ def galore_adamw(cfg: GaloreConfig, learning_rate, weight_decay: float = 0.01,
     return chain(*txs)
 
 
+def bucket_by_shape(keys):
+    """Group leaf indices by an identical-shape key: ``keys[i]`` is a
+    hashable layout descriptor for leaf i (or None to leave it unbucketed).
+    Returns ``(buckets, passthrough)`` — a deterministically-ordered list of
+    ``(key, [indices])`` plus the unbucketed indices. Leaves sharing a key
+    can be stacked and run as one vmapped program (the refresh and 𝒮 bucket
+    layout contract: one compiled program per distinct shape, O(buckets)
+    ops instead of O(leaves))."""
+    groups: dict = {}
+    passthrough = []
+    for i, key in enumerate(keys):
+        if key is None:
+            passthrough.append(i)
+        else:
+            groups.setdefault(key, []).append(i)
+    return sorted(groups.items()), passthrough
+
+
 def _bucketed_manual_refresh(cfg: GaloreConfig, blk_leaves, grads_leaves,
                              refresh_idx, seed):
     """Shape-bucketed round-boundary refresh: blocks with identical
@@ -442,15 +460,13 @@ def _bucketed_manual_refresh(cfg: GaloreConfig, blk_leaves, grads_leaves,
     the per-leaf reference loop (the broadcast-a-seed protocol is unaffected).
     """
     out = [None] * len(blk_leaves)
-    buckets: dict = {}
-    for i, st in enumerate(blk_leaves):
-        if isinstance(st, GaloreBlockState):
-            buckets.setdefault((tuple(st.basis.shape), tuple(st.m.shape)),
-                               []).append(i)
-        else:
-            out[i] = st
+    buckets, passthrough = bucket_by_shape(
+        [(tuple(st.basis.shape), tuple(st.m.shape))
+         if isinstance(st, GaloreBlockState) else None for st in blk_leaves])
+    for i in passthrough:
+        out[i] = blk_leaves[i]
 
-    for (bshape, mshape), idxs in sorted(buckets.items()):
+    for (bshape, mshape), idxs in buckets:
         rank = bshape[-1]
         dim = bshape[-2]
         lead = bshape[:-2]

@@ -253,6 +253,49 @@ def sync_block_hetero_factored(protocol: str, v_stack: jnp.ndarray,
     raise ValueError(protocol)
 
 
+def map_sync_leaves(leaf_fn, v_leaves, b_leaves, bucketed: bool = True):
+    """Apply ``leaf_fn(v_stack, b_stack) -> synced`` over parallel per-leaf
+    lists, one **vmapped program per shape bucket**.
+
+    The per-leaf 𝒮 programs of a real model tree are overwhelmingly
+    shape-identical (every attention block contributes the same (C, m, r)
+    right leaf); running them one-by-one re-emits the same Gram → eigh →
+    joint-basis chain per leaf and serializes the tiny solves. Bucketing by
+    ``(v.shape, v.dtype, b.shape, b.dtype)`` — mirroring the PR-1 refresh
+    bucketing (`galore.bucket_by_shape`) — stacks each bucket and emits the
+    chain once under ``jax.vmap``, so the r×r eigendecompositions lower as
+    one batched solve (kernel-routed on TPU). On CPU the batched eigh is
+    bit-identical to the per-leaf loop, which survives under
+    ``bucketed=False`` as the parity oracle.
+
+    ``None`` v-leaves (non-adapted blocks) pass through as ``None``.
+    ``leaf_fn`` must not return ``None`` (dispatch protocol='none' before
+    calling). Singleton buckets skip the vmap wrapper entirely.
+    """
+    from .galore import bucket_by_shape
+    out = [None] * len(v_leaves)
+    if not bucketed:
+        for i, (v, b) in enumerate(zip(v_leaves, b_leaves)):
+            if v is not None:
+                out[i] = leaf_fn(v, b)
+        return out
+    keys = [None if v is None else
+            (tuple(v.shape), str(v.dtype), tuple(b.shape), str(b.dtype))
+            for v, b in zip(v_leaves, b_leaves)]
+    buckets, _ = bucket_by_shape(keys)
+    for _, idxs in buckets:
+        if len(idxs) == 1:
+            i = idxs[0]
+            out[i] = leaf_fn(v_leaves[i], b_leaves[i])
+            continue
+        vs = jnp.stack([v_leaves[i] for i in idxs])
+        bs = jnp.stack([b_leaves[i] for i in idxs])
+        res = jax.vmap(leaf_fn)(vs, bs)
+        for j, i in enumerate(idxs):
+            out[i] = res[j]
+    return out
+
+
 def sync_block_factored(protocol: str, v_stack: jnp.ndarray,
                         old_basis: jnp.ndarray, new_basis: jnp.ndarray,
                         side: str, weights=None,

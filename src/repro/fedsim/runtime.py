@@ -45,7 +45,20 @@ lift (the parity oracle), and ``fused_round=False`` restores the legacy
 jit-𝒯𝒜 + host-𝒮 round (the eager reference for benchmarks).
 
 :meth:`ShardedFederation.run_rounds` drives K rounds as a single
-``lax.scan`` dispatch for benchmark sweeps.
+``lax.scan`` dispatch for benchmark sweeps. With the default
+``pipeline_sync=True`` (and a method that syncs) the scan runs the
+**one-round-deep pipelined schedule**: the body defers round k's 𝒮 to the
+top of round k+1's iteration (a raw ``state_sync=None`` round core returns
+the unsynced states, which ride the carry), and a post-scan drain runs the
+final round's 𝒮 so the returned states match the sequential schedule
+state-for-state. This is a pure re-association of the same round math —
+round k+1's first local update still consumes round-k *synced* moments, and
+the parity suite pins pipelined ≡ sequential bit-tight — but it lets XLA
+overlap the r×r sync chain with round k+1's independent gradient work
+instead of serializing 𝒮 between rounds. ``pipeline_sync=False`` keeps the
+strictly sequential scan as the oracle; quarantine mode always runs
+sequentially (the quarantine screen rewrites effective weights inside the
+round, which the deferred 𝒮 cannot observe).
 
 This is the production counterpart of core.fed.FedEngine (which vmaps
 clients on a single host).
@@ -88,7 +101,8 @@ class ShardedFederation:
                      pop_lib.ParticipationConfig] = None,
                  robust_agg: str = "none", quarantine: bool = False,
                  quarantine_zmax: float = 6.0, robust_trim: float = 0.2,
-                 robust_iters: int = 8):
+                 robust_iters: int = 8, bucketed_sync: bool = True,
+                 pipeline_sync: bool = True):
         self.cfg = cfg
         self.spec = spec
         self.mesh = mesh
@@ -97,6 +111,9 @@ class ShardedFederation:
         self.factored_sync = factored_sync
         self.fused_round = fused_round
         self.participation = participation
+        self.bucketed_sync = bucketed_sync
+        self.pipeline_sync = pipeline_sync
+        self.quarantine = quarantine
         self.round_idx = 0
 
         if client_chunk is not None:
@@ -137,7 +154,7 @@ class ShardedFederation:
             client_chunk=client_chunk, lift_free=lift_free,
             robust_agg=robust_agg, quarantine=quarantine,
             quarantine_zmax=quarantine_zmax, robust_trim=robust_trim,
-            robust_iters=robust_iters)
+            robust_iters=robust_iters, bucketed_sync=bucketed_sync)
         self._round_core = steps_lib.make_fed_round_step(
             cfg, spec, n_clients,
             state_sync=(state_sync if fused_round else None),
@@ -150,6 +167,10 @@ class ShardedFederation:
         self._round_masked_core = None
         self._round_masked = None
         self._rounds_scan_masked = None
+        # Raw (state_sync=None) round core for the pipelined scans: the
+        # body defers 𝒮 into the next iteration, so the scanned round must
+        # return unsynced states (built lazily).
+        self._round_core_raw = None
 
     # -------------------------------------------------- participation -------
     def sample_round_mask(self, round_idx: Optional[int] = None) -> np.ndarray:
@@ -237,6 +258,13 @@ class ShardedFederation:
         masks: the per-round mask-zeroed weights ride the scan as xs and the
         scanned body is the exclusion-aware masked round. All-true masks
         short-circuit onto the unmasked scan program.
+
+        When :meth:`_pipeline_rounds` holds, the scan is the one-round-deep
+        pipelined schedule (see the module docstring): each body syncs the
+        *previous* round's states before its local phase and a post-scan
+        drain syncs the last round, so results are state-for-state identical
+        to the sequential scan while 𝒮 overlaps the next round's gradient
+        work.
         """
         if not self.fused_round:
             raise ValueError("run_rounds requires fused_round=True: the "
@@ -255,32 +283,85 @@ class ShardedFederation:
                                  "client")
             if masks.all():
                 masks = None
+        pipelined = self._pipeline_rounds()
         if masks is None:
             if self._rounds_scan is None:
-                def scan_rounds(global_trainable, frozen, opt_states, bat, w):
-                    def body(carry, round_b):
-                        g_tr, states = carry
-                        g_tr, states, losses, _ = self._round_core(
-                            g_tr, frozen, states, round_b, w)
-                        return (g_tr, states), losses
-                    return jax.lax.scan(body, (global_trainable, opt_states),
-                                        bat)
+                if pipelined:
+                    self._raw_round()    # builds _round_core_raw
+
+                    def scan_rounds(global_trainable, frozen, opt_states,
+                                    bat, w):
+                        sync = self._make_scan_sync(False)
+
+                        def body(carry, round_b):
+                            g_tr, states, first = carry
+                            states = jax.lax.cond(
+                                first, lambda s: s, lambda s: sync(s, w),
+                                states)
+                            g_tr, states, losses, _ = self._round_core_raw(
+                                g_tr, frozen, states, round_b, w)
+                            return (g_tr, states,
+                                    jnp.zeros((), bool)), losses
+                        (g_tr, states, _), losses = jax.lax.scan(
+                            body, (global_trainable, opt_states,
+                                   jnp.ones((), bool)), bat)
+                        # Pipeline drain: the last round's 𝒮 never ran in a
+                        # body — run it here so the returned states match
+                        # the sequential schedule state-for-state.
+                        return (g_tr, sync(states, w)), losses
+                else:
+                    def scan_rounds(global_trainable, frozen, opt_states,
+                                    bat, w):
+                        def body(carry, round_b):
+                            g_tr, states = carry
+                            g_tr, states, losses, _ = self._round_core(
+                                g_tr, frozen, states, round_b, w)
+                            return (g_tr, states), losses
+                        return jax.lax.scan(
+                            body, (global_trainable, opt_states), bat)
                 self._rounds_scan = jax.jit(scan_rounds,
                                             donate_argnums=(0, 2))
             scan_fn, w_arg = self._rounds_scan, w
         else:
             self._masked_round()     # builds _round_masked_core
             if self._rounds_scan_masked is None:
-                def scan_rounds_masked(global_trainable, frozen, opt_states,
-                                       bat, w_rounds):
-                    def body(carry, xs):
-                        round_b, w_r = xs
-                        g_tr, states = carry
-                        g_tr, states, losses, _ = self._round_masked_core(
-                            g_tr, frozen, states, round_b, w_r)
-                        return (g_tr, states), losses
-                    return jax.lax.scan(body, (global_trainable, opt_states),
-                                        (bat, w_rounds))
+                if pipelined:
+                    self._raw_round()    # builds _round_core_raw
+
+                    def scan_rounds_masked(global_trainable, frozen,
+                                           opt_states, bat, w_rounds):
+                        sync = self._make_scan_sync(True)
+
+                        def body(carry, xs):
+                            round_b, w_r = xs
+                            g_tr, states, first, w_prev = carry
+                            # 𝒮 of the *previous* round uses that round's
+                            # mask-zeroed weights, carried alongside the
+                            # unsynced states.
+                            states = jax.lax.cond(
+                                first, lambda s: s, lambda s: sync(s, w_prev),
+                                states)
+                            g_tr, states, losses, _ = self._round_core_raw(
+                                g_tr, frozen, states, round_b, w_r)
+                            return (g_tr, states, jnp.zeros((), bool),
+                                    w_r), losses
+                        (g_tr, states, _, w_last), losses = jax.lax.scan(
+                            body, (global_trainable, opt_states,
+                                   jnp.ones((), bool), w_rounds[0]),
+                            (bat, w_rounds))
+                        return (g_tr, sync(states, w_last)), losses
+                else:
+                    def scan_rounds_masked(global_trainable, frozen,
+                                           opt_states, bat, w_rounds):
+                        def body(carry, xs):
+                            round_b, w_r = xs
+                            g_tr, states = carry
+                            g_tr, states, losses, _ = self._round_masked_core(
+                                g_tr, frozen, states, round_b, w_r)
+                            return (g_tr, states), losses
+                        return jax.lax.scan(
+                            body, (global_trainable, opt_states),
+                            (bat, w_rounds))
                 self._rounds_scan_masked = jax.jit(scan_rounds_masked,
                                                    donate_argnums=(0, 2))
             scan_fn = self._rounds_scan_masked
@@ -293,6 +374,45 @@ class ShardedFederation:
         return {"losses": losses,                          # (K, C, T)
                 "mean_final_loss": float(jnp.mean(losses[-1, :, -1]))}
 
+    # ------------------------------------------------ pipelined rounds ------
+    def _pipeline_rounds(self) -> bool:
+        """Whether :meth:`run_rounds` scans the one-round-deep pipelined
+        schedule. Requires a fused round whose method actually syncs;
+        quarantine is excluded because the quarantine screen rewrites the
+        effective weights *inside* the round program and the raw round does
+        not return them — the deferred 𝒮 could not reproduce the
+        post-quarantine weighting."""
+        return (self.pipeline_sync and self.fused_round
+                and self.state_sync != "none" and not self.quarantine)
+
+    def _raw_round(self):
+        """Raw (state_sync=None) round core for the pipelined scans: the
+        body defers 𝒮 to the top of the next iteration, so the scanned
+        round must return unsynced states. One core serves masked and
+        unmasked scans — ``exclude_zero_weights`` only alters the in-round
+        sync tail, which the raw core never runs (the deferred
+        `_make_scan_sync` carries the exclusion instead)."""
+        if self._round_core_raw is None:
+            self._round_core_raw = steps_lib.make_fed_round_step(
+                self.cfg, self.spec, self.n_clients, state_sync=None,
+                **self._step_kwargs)
+
+    def _make_scan_sync(self, exclude_zero: bool):
+        """The deferred 𝒮 + install + seed bump used by the pipelined scan
+        bodies and the post-scan drain — exactly the fused round's sync tail
+        (`steps.sync_client_states`), applied one round late. Weight
+        normalization is internal to the sync protocols, so passing the raw
+        (mask-zeroed) round weights is equivalent to the in-round
+        normalized weights."""
+        def sync(states, w):
+            return steps_lib.sync_client_states(
+                states, w, self.n_clients, self.state_sync,
+                factored=self.factored_sync,
+                bases_shared=self._bases_shared(),
+                exclude_zero_weights=exclude_zero,
+                bucketed=self.bucketed_sync)
+        return sync
+
     # ---------------------------------------------- 𝒮 (eager reference) -----
     def _sync_and_reinit(self, out_states, v_upload, w, exclude_zero=False):
         """Host-side 𝒮 of the legacy round: the same server filter as the
@@ -303,7 +423,8 @@ class ShardedFederation:
         return steps_lib.sync_client_states(
             out_states, w, self.n_clients, self.state_sync,
             factored=self.factored_sync, bases_shared=self._bases_shared(),
-            exclude_zero_weights=exclude_zero)
+            exclude_zero_weights=exclude_zero,
+            bucketed=self.bucketed_sync)
 
     def _bases_shared(self) -> bool:
         """The shared-basis factored sync requires every client on the

@@ -8,6 +8,10 @@ from __future__ import annotations
 
 import jax
 
+import jax.numpy as jnp
+
+from .batched_eigh import MAX_JACOBI_DIM
+from .batched_eigh import jacobi_eigh as _jacobi_eigh
 from .flash_attention import flash_attention as _flash
 from .galore_adamw import galore_adamw_step as _galore
 from .galore_adamw import galore_precond_step as _galore_precond
@@ -42,3 +46,25 @@ def lowrank_linear(x, w, basis, rt, scale, **kw):
 
 def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk=128):
     return _rwkv6(r, k, v, w, u, s0, chunk=chunk, interpret=_interpret())
+
+
+def batched_small_eigh(a, *, force=None, sweeps=12, block_b=8):
+    """Eigendecomposition of a batched symmetric stack ``(..., n, n)``.
+
+    Returns ``(lam, vec)`` ascending, matching ``jnp.linalg.eigh``. Routing:
+    on TPU with n ≤ 64 the batched parallel-Jacobi Pallas kernel keeps the
+    whole stack VMEM-resident (XLA's QDWH ``eigh`` is built for one large
+    matrix, not (B, r, r) stacks); on CPU LAPACK's per-matrix ``syevd`` is
+    already optimal, so the jnp path is the default — bit-identical to the
+    pre-kernel behavior. ``force`` pins a path for parity tests:
+    ``"jacobi"`` (interpret-mode on CPU) or ``"lapack"``.
+    """
+    n = a.shape[-1]
+    use_jacobi = (force == "jacobi" or
+                  (force is None and not _interpret() and n <= MAX_JACOBI_DIM))
+    if force == "lapack":
+        use_jacobi = False
+    if use_jacobi:
+        return _jacobi_eigh(a, sweeps=sweeps, block_b=block_b,
+                            interpret=_interpret())
+    return jnp.linalg.eigh(a)

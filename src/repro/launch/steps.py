@@ -183,7 +183,8 @@ def make_fed_local_step(cfg: ArchConfig, spec: TrainSpec,
 
 def sync_client_states(out_st, w, n_clients: int, state_sync: str,
                        factored: bool, bases_shared: bool,
-                       exclude_zero_weights: bool = False):
+                       exclude_zero_weights: bool = False,
+                       bucketed: bool = True):
     """Server-side 𝒮 + next-round install on client-stacked optimizer states
     (the in-mesh tail of the round program; also usable eagerly).
 
@@ -196,6 +197,9 @@ def sync_client_states(out_st, w, n_clients: int, state_sync: str,
     participation-masked round) additionally drops zero-weight clients from
     the AJIVE joint-basis estimate — without it they only vanish from the
     final weighted mean, not from the unweighted joint-subspace phases.
+    ``bucketed`` runs shape-identical leaves as one vmapped program per
+    bucket (`state_sync.map_sync_leaves`); False keeps the per-leaf loop as
+    the parity oracle.
     """
     g_stack = gal.galore_state_of(out_st)
     if state_sync != "none":
@@ -204,34 +208,34 @@ def sync_client_states(out_st, w, n_clients: int, state_sync: str,
         vs, treedef = jax.tree_util.tree_flatten(v_upload,
                                                  is_leaf=lambda x: x is None)
         bs = jax.tree_util.tree_leaves(bases, is_leaf=lambda x: x is None)
-        out = []
-        for v_stack, b_stack in zip(vs, bs):
-            if v_stack is None:
-                out.append(None)
-                continue
+
+        def leaf_fn(v_stack, b_stack):
             rank = b_stack.shape[-1]
             side = proj.RIGHT if v_stack.shape[-1] == rank else proj.LEFT
             if not factored:
-                synced = _dense_sync_block(state_sync, v_stack, b_stack, w,
-                                           rank, side)
-            elif bases_shared:
+                return _dense_sync_block(state_sync, v_stack, b_stack, w,
+                                         rank, side)
+            if bases_shared:
                 # Factored 𝒮: sync the (C, ., r) uplink directly; the shared
                 # seeded basis cancels, so no (C, m, n) lift and no (n, n)
                 # projector. Result is the O(dim·r) projected state.
-                synced = jnp.maximum(sync_lib.sync_block_synced_factored(
+                return jnp.maximum(sync_lib.sync_block_synced_factored(
                     state_sync, v_stack, side, w, rank,
                     exclude_zero_weights=exclude_zero_weights), 0.0)
-            else:
-                # Diverged bases (data-driven refreshes): the lift → 𝒮 →
-                # re-project round-trip closes over r×r transfer Grams —
-                # the dense per-client lift stays a parity oracle.
-                synced = jnp.maximum(sync_lib.sync_block_hetero_factored(
-                    state_sync, v_stack, b_stack, side, w, rank,
-                    exclude_zero_weights=exclude_zero_weights), 0.0)
-            # every client slot shares the synced projected state (a
-            # broadcast view of the O(dim·r) buffer, not a dense tensor)
-            out.append(jnp.broadcast_to(synced[None],
-                                        (n_clients,) + synced.shape))
+            # Diverged bases (data-driven refreshes): the lift → 𝒮 →
+            # re-project round-trip closes over r×r transfer Grams —
+            # the dense per-client lift stays a parity oracle.
+            return jnp.maximum(sync_lib.sync_block_hetero_factored(
+                state_sync, v_stack, b_stack, side, w, rank,
+                exclude_zero_weights=exclude_zero_weights), 0.0)
+
+        synced_leaves = sync_lib.map_sync_leaves(leaf_fn, vs, bs,
+                                                 bucketed=bucketed)
+        # every client slot shares the synced projected state (a broadcast
+        # view of the O(dim·r) buffer, not a dense tensor)
+        out = [None if s is None else
+               jnp.broadcast_to(s[None], (n_clients,) + s.shape)
+               for s in synced_leaves]
         synced_tree = jax.tree_util.tree_unflatten(treedef, out)
         g_new = gal.with_projected_v(g_stack, synced_tree)
     else:
@@ -273,7 +277,8 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
                         quarantine: bool = False,
                         quarantine_zmax: float = 6.0,
                         robust_trim: float = 0.2,
-                        robust_iters: int = 8) -> Callable:
+                        robust_iters: int = 8,
+                        bucketed_sync: bool = True) -> Callable:
     """A full federated round (Algorithm 1) as one SPMD program:
 
       broadcast (implicit: clients start from the shared global base) →
@@ -295,7 +300,11 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
     client mesh axes) runs the local phase in C/B sequential chunks.
     ``state_sync=None`` preserves the legacy 𝒯→𝒜 program: raw end-of-round
     states are returned and the caller runs 𝒮 on the host (the eager
-    reference path, and the dry-run default).
+    reference path, and the dry-run default). It is also the building block
+    of the runtime's pipelined scan (`fedsim.runtime.ShardedFederation.
+    run_rounds`), which defers each round's `sync_client_states` to the top
+    of the next round's body. ``bucketed_sync`` selects the bucketed/vmapped
+    𝒮 leaf execution (see `sync_client_states`).
     ``exclude_zero_weights`` lowers the participation-masked round variant:
     the caller feeds pre-masked weights (zero for non-participants — the
     in-program normalization renormalizes over the participants) and 𝒮
@@ -521,7 +530,8 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
             out_st = sync_client_states(
                 out_st, w, n_clients, state_sync, factored=factored_sync,
                 bases_shared=(spec.refresh_mode != "svd"),
-                exclude_zero_weights=exclude_zero_weights or quarantine)
+                exclude_zero_weights=exclude_zero_weights or quarantine,
+                bucketed=bucketed_sync)
             return new_global, out_st, losses, None
         # 𝒮 payload for the host-side filter: projected second moments ṽ
         # (client-stacked, O(n·r))

@@ -1,0 +1,152 @@
+"""Property tests for the batched small-eigh kernel vs `jnp.linalg.eigh`.
+
+The Pallas parallel-order Jacobi kernel (`kernels.batched_eigh.jacobi_eigh`)
+must agree with LAPACK on random SPD (B, r, r) stacks — eigenvalues to fp32
+precision, eigenvectors up to sign/rotation (checked via orthonormality and
+reconstruction, which are basis-unique) — including the adversarial spectra
+the sync path actually produces: near-degenerate clusters, exactly repeated
+eigenvalues, and rank-deficient Grams (where the PR-1 eigenvalue-floor path
+`ajive._inv_sqrt_rank_safe` must survive batching).
+
+Runs the kernel in interpret mode (`force="jacobi"` routes through the
+platform gate, which interprets on CPU). Hypothesis widens the input
+distribution when installed; the parametrized cases below always run, so the
+suite loses breadth but not coverage when it is absent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ajive
+from repro.kernels.batched_eigh import MAX_JACOBI_DIM
+from repro.kernels.ops import batched_small_eigh
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _spd_stack(seed, b, n, rank=None):
+    """Random SPD stack A = X Xᵀ (rank-limited when ``rank`` is given)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (b, n, rank or n)) / np.sqrt(n)
+    return jnp.einsum("bik,bjk->bij", x, x)
+
+
+def _check_against_lapack(a, atol_scale=5e-5):
+    lam_j, vec_j = batched_small_eigh(a, force="jacobi")
+    lam_r, _ = jnp.linalg.eigh(a)
+    scale = float(jnp.max(jnp.abs(lam_r))) + 1e-6
+    tol = atol_scale * scale
+    # eigenvalues: ascending, matching LAPACK's
+    assert jnp.allclose(lam_j, lam_r, atol=tol), \
+        float(jnp.max(jnp.abs(lam_j - lam_r)))
+    assert bool(jnp.all(jnp.diff(lam_j, axis=-1) >= -tol))
+    # eigenvectors: orthonormal and reconstructing (sign/rotation-free checks)
+    n = a.shape[-1]
+    gram = jnp.einsum("bij,bik->bjk", vec_j, vec_j)
+    assert jnp.allclose(gram, jnp.eye(n)[None], atol=1e-4)
+    rec = jnp.einsum("bik,bk,bjk->bij", vec_j, lam_j, vec_j)
+    assert jnp.allclose(rec, a, atol=tol), float(jnp.max(jnp.abs(rec - a)))
+
+
+@pytest.mark.parametrize("n", [3, 8, 16, 33])
+def test_jacobi_matches_lapack_random_spd(n):
+    _check_against_lapack(_spd_stack(n, 4, n))
+
+
+def test_jacobi_matches_lapack_at_max_dim():
+    """The r ≤ 64 ceiling the sync path actually uses."""
+    _check_against_lapack(_spd_stack(0, 2, MAX_JACOBI_DIM))
+
+
+def test_jacobi_rank_deficient_stack():
+    """Rank-3 8×8 Grams: the trailing eigenvalues must pin to ~0 (not drift
+    negative past tolerance), exactly what the sync path's floor consumes."""
+    a = _spd_stack(7, 4, 8, rank=3)
+    _check_against_lapack(a)
+    lam, _ = batched_small_eigh(a, force="jacobi")
+    assert jnp.allclose(lam[..., :5], 0.0, atol=1e-5)
+
+
+def test_jacobi_repeated_and_near_degenerate_spectra():
+    """Exactly repeated (c·I) and ε-split clustered spectra — the rotation
+    angle must collapse to 0 on converged pairs instead of oscillating."""
+    n = 5
+    key = jax.random.PRNGKey(3)
+    q, _ = jnp.linalg.qr(jax.random.normal(key, (n, n)))
+    spectra = jnp.stack([
+        2.0 * jnp.ones(n),                                  # c·I
+        jnp.array([1.0, 1.0 + 1e-6, 2.0, 2.0, 5.0]),        # ε-split cluster
+        jnp.array([0.0, 0.0, 1.0, 1.0, 1.0]),               # repeated + null
+    ])
+    a = jnp.einsum("ij,bj,kj->bik", q, spectra, q)
+    _check_against_lapack(a)
+    lam, _ = batched_small_eigh(a, force="jacobi")
+    assert jnp.allclose(lam, jnp.sort(spectra, axis=-1), atol=2e-5)
+
+
+def test_default_cpu_path_is_lapack_bit_identical():
+    """force=None on CPU must route to jnp.linalg.eigh unchanged — the
+    pre-kernel behavior every existing test tolerance was set against."""
+    a = _spd_stack(1, 3, 8)
+    lam_d, vec_d = batched_small_eigh(a)
+    lam_r, vec_r = jnp.linalg.eigh(a)
+    assert jnp.array_equal(lam_d, lam_r) and jnp.array_equal(vec_d, vec_r)
+
+
+def test_large_dim_falls_back_to_lapack():
+    """n > MAX_JACOBI_DIM is out of the kernel's contract: the default route
+    must fall back to LAPACK rather than raise."""
+    a = _spd_stack(2, 2, MAX_JACOBI_DIM + 16)
+    lam, _ = batched_small_eigh(a)
+    lam_r, _ = jnp.linalg.eigh(a)
+    assert jnp.array_equal(lam, lam_r)
+
+
+def test_eigenvalue_floor_survives_batching():
+    """PR-1's rank-safe inverse-sqrt floor under batching: the λ_max
+    reference must stay *per-row* (rows with wildly different scales can't
+    leak into each other's keep threshold), exact-null directions map to 0
+    with no inf/nan, and the batched application is bit-identical to the
+    per-row one. Then the same through the kernel-routed top-k chain on
+    genuinely rank-deficient Grams."""
+    # rows at very different scales, each with an exact-zero null tail
+    lam_desc = jnp.array([[4.0, 1.0, 0.0, 0.0],
+                          [1e6, 1e-3, 1e-12, 0.0],
+                          [1e-4, 1e-5, 0.0, 0.0]], jnp.float32)
+    inv = ajive._inv_sqrt_rank_safe(lam_desc)
+    assert bool(jnp.all(jnp.isfinite(inv)))
+    assert jnp.array_equal(inv[:, 2:], jnp.zeros((3, 2)))   # nulls → exact 0
+    assert inv[1, 1] > 0.0          # 1e-3 ≫ 1e-10·1e6: kept despite row scale
+    per = jnp.stack([ajive._inv_sqrt_rank_safe(l) for l in lam_desc])
+    assert jnp.array_equal(inv, per)
+    # same per-row reference for the eigenvector-column floor
+    vec = jnp.broadcast_to(jnp.eye(4), (3, 4, 4))
+    kept = ajive._keep_mask_cols(lam_desc, vec)
+    assert jnp.array_equal(kept[:, :, 2:], jnp.zeros((3, 4, 2)))
+    assert bool(jnp.all(kept[1, :, :2] == vec[1, :, :2]))
+    # and through the batched kernel-routed top-k chain on rank-3 Grams:
+    # everything downstream of the floor stays finite
+    a = _spd_stack(9, 6, 8, rank=3)
+    lam_k, vec_k = ajive._topk_eig_desc_stack(a, 4)
+    assert bool(jnp.all(jnp.isfinite(ajive._inv_sqrt_rank_safe(lam_k))))
+    assert bool(jnp.all(jnp.isfinite(ajive._keep_mask_cols(lam_k, vec_k))))
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(2, 16), b=st.integers(1, 4),
+           seed=st.integers(0, 10**6))
+    def test_jacobi_matches_lapack_property(n, b, seed):
+        _check_against_lapack(_spd_stack(seed, b, n))
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(3, 12), rank=st.integers(1, 3),
+           seed=st.integers(0, 10**6))
+    def test_jacobi_rank_deficient_property(n, rank, seed):
+        a = _spd_stack(seed, 2, n, rank=min(rank, n))
+        _check_against_lapack(a)

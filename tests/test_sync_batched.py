@@ -1,0 +1,360 @@
+"""Lock-in suite for the batched-bucket 𝒮 and the one-round pipelined scan.
+
+Two independent equivalences, each with its surviving oracle:
+
+* **Bucketed 𝒮 ≡ per-leaf 𝒮** (`state_sync.map_sync_leaves`): shape-bucketed
+  vmapped sync must reproduce the per-leaf loop (`bucketed=False`) for every
+  protocol, both sides, stacked scan-block leaves, shared AND heterogeneous
+  (transfer-Gram) bases, masked cohorts, and the robust-𝒜 round variants.
+  On CPU the batched eigh is bit-identical, so tolerances are fp-noise tight.
+
+* **Pipelined rounds ≡ sequential rounds**: the pipelined `run_rounds` scan
+  (round k's 𝒮 deferred to the top of round k+1, post-scan drain) is a pure
+  re-association of the sequential schedule — state-for-state identical
+  results in both the engine (`core.fed`) and the sharded runtime
+  (`fedsim.runtime`), with `pipeline_sync=False` as the oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import projector as proj
+from repro.core import state_sync as sync
+from repro.core.fed import FedConfig, FedEngine
+
+PROTOCOLS = ["avg", "avg_svd", "ajive"]
+GALORE_METHODS = ["fedgalore", "fedgalore_minus", "fedgalore_avg",
+                  "fedgalore_avg_svd"]
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _trees_close(a, b, atol):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        x = jnp.asarray(x, jnp.float32)
+        y = jnp.asarray(y, jnp.float32)
+        assert jnp.allclose(x, y, atol=atol), float(jnp.max(jnp.abs(x - y)))
+
+
+# ------------------------------------------------ unit: map_sync_leaves -----
+
+def _mixed_leaves(c=5, r=4):
+    """A model-tree-like leaf list: two shape buckets with >1 member (the
+    vmapped path), singleton buckets (the skip-vmap path), a left-side leaf,
+    a stacked (C, nb, m, r) scan-block leaf pair, and a None (non-adapted)
+    leaf. Per-client bases so the same list serves the hetero transfer-Gram
+    path."""
+    def v_right(key, m):
+        return jnp.abs(jax.random.normal(key, (c, m, r))) + 0.1
+
+    def v_left(key, n):
+        return jnp.abs(jax.random.normal(key, (c, r, n))) + 0.1
+
+    def b_stack(seed, dim):
+        return jnp.stack([proj.random_basis(seed + i, dim, r)
+                          for i in range(c)])
+
+    k = [jax.random.fold_in(KEY, i) for i in range(8)]
+    v_leaves = [v_right(k[0], 16), v_right(k[1], 16),       # bucket of 2
+                v_right(k[2], 12),                          # singleton
+                v_left(k[3], 24), v_left(k[4], 24),         # bucket of 2
+                None,                                       # non-adapted
+                jnp.abs(jax.random.normal(k[5], (c, 3, 16, r))) + 0.1,
+                jnp.abs(jax.random.normal(k[6], (c, 3, 16, r))) + 0.1]
+    b_leaves = [b_stack(0, 24), b_stack(10, 24),
+                b_stack(20, 20),
+                b_stack(30, 8), b_stack(40, 8),
+                None,
+                jnp.stack([b_stack(50 + j, 24) for j in range(3)], axis=1),
+                jnp.stack([b_stack(80 + j, 24) for j in range(3)], axis=1)]
+    return v_leaves, b_leaves
+
+
+@pytest.mark.parametrize("protocol", PROTOCOLS)
+@pytest.mark.parametrize("hetero", [False, True])
+@pytest.mark.parametrize("masked", [False, True])
+def test_map_sync_leaves_bucketed_matches_per_leaf(protocol, hetero, masked):
+    """Bucketed vmapped 𝒮 ≡ per-leaf loop across mixed shape buckets, both
+    sides, stacked leaves, None passthrough, shared and hetero bases, and
+    the masked-cohort (`exclude_zero_weights`) contract."""
+    c = 5
+    v_leaves, b_leaves = _mixed_leaves(c)
+    w = jnp.array([1.0, 2.0, 0.0, 1.0, 3.0]) if masked \
+        else jnp.array([1.0, 2.0, 1.0, 1.0, 3.0])
+
+    def leaf_fn(v_stack, bst):
+        rank = bst.shape[-1]
+        side = proj.RIGHT if v_stack.shape[-1] == rank else proj.LEFT
+        if hetero:
+            return sync.sync_block_hetero_factored(
+                protocol, v_stack, bst, side, w, rank,
+                exclude_zero_weights=masked)
+        return sync.sync_block_synced_factored(
+            protocol, v_stack, side, w, rank, exclude_zero_weights=masked)
+
+    ref = sync.map_sync_leaves(leaf_fn, v_leaves, b_leaves, bucketed=False)
+    out = sync.map_sync_leaves(leaf_fn, v_leaves, b_leaves, bucketed=True)
+    assert out[5] is None and ref[5] is None
+    for o, rf in zip(out, ref):
+        if rf is None:
+            assert o is None
+            continue
+        assert o.shape == rf.shape
+        assert jnp.allclose(o, rf, atol=1e-6), float(jnp.max(jnp.abs(o - rf)))
+
+
+def test_map_sync_leaves_rejects_nothing_on_all_none():
+    out = sync.map_sync_leaves(lambda v, b: v, [None, None], [None, None])
+    assert out == [None, None]
+
+
+def test_ajive_sketch_route_matches_dense_oracle():
+    """Large-cohort wide-block AJIVE (d > 64 and C·k > 64 → the sketched
+    Rayleigh–Ritz joint basis) must still match the dense lift → 𝒮 →
+    re-project oracle on a well-separated shared-signal stack, and the
+    bucketed dispatch must be exact parity with the per-leaf call."""
+    c, m, n, r = 20, 96, 24, 4
+    basis = proj.random_basis(0, n, r)
+    scale = jnp.linspace(6.0, 2.0, r)
+    base = jax.random.normal(KEY, (m, r)) * scale[None, :]
+    v_stack = jnp.stack([jnp.abs(base + 0.1 * jax.random.normal(
+        jax.random.fold_in(KEY, i), (m, r))) for i in range(c)])
+    w = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 99), (c,))) + 0.5
+
+    fact = sync.sync_block_synced_factored("ajive", v_stack, proj.RIGHT, w, r)
+    views = jnp.einsum("kmr,nr->kmn", v_stack, basis)
+    dense = jnp.maximum(sync.project_state(
+        sync.sync_lifted_views("ajive", views, w, r), basis, proj.RIGHT), 0.0)
+    assert jnp.allclose(fact, dense, atol=1e-3), \
+        float(jnp.max(jnp.abs(fact - dense)))
+
+    out = sync.map_sync_leaves(
+        lambda v, b: sync.sync_block_synced_factored(
+            "ajive", v, proj.RIGHT, w, r),
+        [v_stack, v_stack + 0.01], [jnp.zeros((c, n, r))] * 2, bucketed=True)
+    assert jnp.allclose(out[0], fact, atol=1e-6)
+
+
+# ----------------------------------------------------- engine (core.fed) ----
+
+def _problem():
+    """Two same-shape hidden layers so the engine's 𝒮 tree has a real
+    multi-leaf shape bucket (plus the differently-shaped head)."""
+    k1, k2, k3 = (jax.random.fold_in(KEY, i) for i in range(3))
+    params = {"l1": {"w": 0.3 * jax.random.normal(k1, (8, 16)),
+                     "b": jnp.zeros(16)},
+              "l2": {"w": 0.3 * jax.random.normal(k2, (8, 16)),
+                     "b": jnp.zeros(16)},
+              "head": {"w": 0.3 * jax.random.normal(k3, (16, 4)),
+                       "b": jnp.zeros(4)}}
+
+    def loss(p, batch):
+        x, y = batch
+        h = jnp.tanh(x @ p["l1"]["w"] + p["l1"]["b"]
+                     + x @ p["l2"]["w"] + p["l2"]["b"])
+        out = h @ p["head"]["w"] + p["head"]["b"]
+        return jnp.mean((out - y) ** 2)
+
+    return params, loss
+
+
+def _round_batches(seed, k_rounds=None, k=4, t=5, b=16):
+    kb = jax.random.PRNGKey(seed)
+    lead = (k, t) if k_rounds is None else (k_rounds, k, t)
+    x = jax.random.normal(kb, lead + (b, 8))
+    w_true = 0.5 * jax.random.normal(jax.random.fold_in(kb, 1), (8, 4))
+    return (x, jnp.einsum("...bi,io->...bo", x, w_true))
+
+
+def _engine(method, **over):
+    params, loss = _problem()
+    cfg = dict(method=method, rank=4, lr=3e-2, local_steps=5, clip_norm=10.0,
+               weight_decay=0.01)
+    cfg.update(over)
+    return FedEngine(FedConfig(**cfg), loss, params)
+
+
+@pytest.mark.parametrize("method", GALORE_METHODS)
+def test_engine_bucketed_sync_matches_per_leaf(method):
+    """bucketed_sync=True ≡ bucketed_sync=False through full engine rounds —
+    covers the adaptive round-0 hetero (transfer-Gram) 𝒮 and the shared-basis
+    steady state, on a tree with a genuine multi-leaf shape bucket."""
+    engines = {}
+    for bucketed in (True, False):
+        eng = _engine(method, bucketed_sync=bucketed)
+        for r in range(2):
+            eng.run_round(_round_batches(r))
+        engines[bucketed] = eng
+    _trees_close(engines[True].global_trainable,
+                 engines[False].global_trainable, atol=1e-6)
+    if engines[False].synced_v is not None:
+        _trees_close(engines[True].synced_v, engines[False].synced_v,
+                     atol=1e-6)
+
+
+@pytest.mark.parametrize("method", GALORE_METHODS)
+def test_engine_pipelined_rounds_match_sequential(method):
+    """Pipelined K-round scan ≡ sequential scan (pipeline_sync=False oracle)
+    over K=5 rounds: global trainable, synced moments, and every per-round
+    loss, for every GaLore method."""
+    outs = {}
+    for pipe in (True, False):
+        eng = _engine(method, pipeline_sync=pipe)
+        m = eng.run_rounds(_round_batches(3, k_rounds=5))
+        outs[pipe] = (eng.global_trainable, eng.synced_v, m["local_loss"])
+    for a, b in zip(outs[True], outs[False]):
+        _trees_close(a, b, atol=1e-6)
+
+
+def test_engine_pipelined_masked_rounds_match_sequential():
+    """Per-round participation masks ride the pipelined scan: the deferred 𝒮
+    must use the *previous* round's mask-zeroed weights (carried alongside
+    the unsynced states), matching the sequential masked scan exactly."""
+    k_rounds, c = 5, 4
+    masks = np.ones((k_rounds, c), bool)
+    masks[1, 0] = False
+    masks[3, 2] = masks[3, 3] = False
+    outs = {}
+    for pipe in (True, False):
+        eng = _engine("fedgalore", pipeline_sync=pipe)
+        m = eng.run_rounds(_round_batches(5, k_rounds=k_rounds), masks=masks)
+        outs[pipe] = (eng.global_trainable, eng.synced_v, m["local_loss"])
+    for a, b in zip(outs[True], outs[False]):
+        _trees_close(a, b, atol=1e-6)
+
+
+@pytest.mark.parametrize("robust", ["norm_clip", "trimmed_mean", "geomedian"])
+def test_engine_pipelined_robust_agg_matches_sequential(robust):
+    """The guarded (robust-𝒜) scan pipelines too: skip_sync captures the
+    post-guard effective weights, so deferring 𝒮 by one round changes
+    nothing."""
+    outs = {}
+    for pipe in (True, False):
+        eng = _engine("fedgalore", robust_agg=robust, pipeline_sync=pipe)
+        m = eng.run_rounds(_round_batches(7, k_rounds=3))
+        outs[pipe] = (eng.global_trainable, eng.synced_v, m["local_loss"])
+    for a, b in zip(outs[True], outs[False]):
+        _trees_close(a, b, atol=1e-6)
+
+
+def test_engine_single_round_ignores_pipeline_flag():
+    """run_round (one round) has nothing to overlap — pipeline_sync must not
+    change its result vs the sequential engine."""
+    engines = {}
+    for pipe in (True, False):
+        eng = _engine("fedgalore", pipeline_sync=pipe)
+        for r in range(2):
+            eng.run_round(_round_batches(r))
+        engines[pipe] = eng
+    _trees_close(engines[True].global_trainable,
+                 engines[False].global_trainable, atol=0.0)
+    _trees_close(engines[True].synced_v, engines[False].synced_v, atol=0.0)
+
+
+# ---------------------------------------------- sharded runtime (fedsim) ----
+
+def _runtime_setup(c_clients=3):
+    from repro.configs import get_config, smoke_variant
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import TrainSpec
+
+    cfg = smoke_variant(get_config("qwen1.5-0.5b"))
+    mesh = make_host_mesh(1)
+    spec = TrainSpec(rank=4, lr=1e-3, local_steps=2, refresh_mode="random")
+
+    def batches(seed, k_rounds=None):
+        kk = jax.random.PRNGKey(seed)
+        lead = ((c_clients, 2, 2, 8) if k_rounds is None
+                else (k_rounds, c_clients, 2, 2, 8))
+        toks = jax.random.randint(kk, lead, 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+
+    return cfg, mesh, spec, batches
+
+
+def test_runtime_bucketed_sync_matches_per_leaf():
+    """ShardedFederation bucketed in-mesh 𝒮 ≡ the per-leaf loop on the real
+    transformer tree (shared seeded bases)."""
+    from repro.fedsim import ShardedFederation
+
+    c = 3
+    cfg, mesh, spec, batches = _runtime_setup(c)
+    feds = {b: ShardedFederation(cfg, spec, mesh, c, state_sync="ajive",
+                                 bucketed_sync=b)
+            for b in (True, False)}
+    for r in range(2):
+        bat = batches(r)
+        feds[True].run_round(bat)
+        feds[False].run_round(bat)
+    _trees_close(feds[True].global_trainable, feds[False].global_trainable,
+                 atol=1e-6)
+    _trees_close(feds[True].opt_states, feds[False].opt_states, atol=1e-6)
+
+
+def test_runtime_bucketed_hetero_sync_matches_per_leaf():
+    """refresh_mode='svd' diverges the bases, so the bucketed 𝒮 runs the
+    transfer-Gram hetero path under vmap — must match the per-leaf loop."""
+    from repro.configs import get_config, smoke_variant
+    from repro.fedsim import ShardedFederation
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import TrainSpec
+
+    cfg = smoke_variant(get_config("qwen1.5-0.5b"))
+    mesh = make_host_mesh(1)
+    spec = TrainSpec(rank=4, lr=1e-3, local_steps=2, refresh_mode="svd",
+                     refresh_every=2)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (3, 2, 2, 8), 0,
+                              cfg.vocab_size)
+    bat = {"tokens": toks, "labels": toks}
+    feds = {b: ShardedFederation(cfg, spec, mesh, 3, state_sync="ajive",
+                                 bucketed_sync=b)
+            for b in (True, False)}
+    feds[True].run_round(bat)
+    feds[False].run_round(bat)
+    _trees_close(feds[True].global_trainable, feds[False].global_trainable,
+                 atol=1e-6)
+    _trees_close(feds[True].opt_states, feds[False].opt_states, atol=1e-6)
+
+
+def test_runtime_pipelined_rounds_match_sequential():
+    """Pipelined run_rounds ≡ sequential in the sharded runtime, unmasked
+    and with per-round participation masks (the deferred 𝒮 carries each
+    round's mask-zeroed weights)."""
+    from repro.fedsim import ShardedFederation
+
+    c, k_rounds = 3, 5
+    cfg, mesh, spec, batches = _runtime_setup(c)
+    bat = batches(7, k_rounds=k_rounds)
+    masks = np.ones((k_rounds, c), bool)
+    masks[0, 1] = False
+    masks[2, 0] = False
+    masks[4, 1] = masks[4, 2] = False
+    for mk in (None, masks):
+        outs = {}
+        for pipe in (True, False):
+            fed = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive",
+                                    pipeline_sync=pipe)
+            m = fed.run_rounds(bat, masks=mk)
+            outs[pipe] = (fed.global_trainable, fed.opt_states, m["losses"])
+        for a, b in zip(outs[True], outs[False]):
+            _trees_close(a, b, atol=1e-6)
+
+
+def test_runtime_quarantine_forces_sequential():
+    """Quarantine rewrites effective weights inside the round program, which
+    the deferred 𝒮 cannot observe — the pipelined gate must refuse."""
+    from repro.fedsim import ShardedFederation
+
+    c = 3
+    cfg, mesh, spec, batches = _runtime_setup(c)
+    fed = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive",
+                            quarantine=True, pipeline_sync=True)
+    assert not fed._pipeline_rounds()
+    fed_off = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive",
+                                pipeline_sync=False)
+    assert not fed_off._pipeline_rounds()
+    fed_on = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive")
+    assert fed_on._pipeline_rounds()
