@@ -24,12 +24,11 @@ Acceptance keys (gated by ``scripts/ci.sh --participation-smoke``):
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 from repro.core.population import ParticipationConfig
 
-from .common import emit, run_federated_trial
+from .common import dump_json, emit, run_federated_trial
 
 DROPOUTS = (0.0, 0.25, 0.5)
 STALENESS = (0, 1, 4)
@@ -119,8 +118,7 @@ def main(smoke=False, rounds=None, n_clients=4, seed=0, out=None,
           f"galore_deg={degradation['fedgalore']:.3f};"
           f"fedit_deg={degradation['fedit']:.3f}"))
     if out:
-        with open(out, "w") as f:
-            json.dump(result, f, indent=1)
+        dump_json(out, result)
     return result
 
 

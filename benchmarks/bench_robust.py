@@ -8,6 +8,15 @@ ladder of defenses: none, in-round quarantine, and quarantine stacked on a
 robust factored aggregator (trimmed mean / geometric median), all in rank-r
 factored coordinates (no dense lift anywhere on the defense path).
 
+The runtime leg drives the same seeded adversary schedule through the SPMD
+``fedsim.ShardedFederation`` round program via its engine-parity
+``run_round(attack=)`` operand — once on the shared seeded basis
+(``refresh_mode='random'``) and once with diverged bases
+(``refresh_mode='svd'``), where the robust modes re-base every client's
+factored stack onto the reference client's basis through the r×r transfer
+Grams before the coordinate-wise vote. It also times the quarantined
+``run_rounds`` scan pipelined vs sequential at C ∈ {8, 64}.
+
 Acceptance keys (gated by ``scripts/ci.sh --robust-smoke``):
   honest_bit_identity          the all-honest guarded run is EXACTLY the
                                unguarded run (screen no-op, untouched
@@ -22,17 +31,30 @@ Acceptance keys (gated by ``scripts/ci.sh --robust-smoke``):
                                ``degradation_bound`` of the honest run,
                                while the undefended cell degrades strictly
                                more (or diverges outright)
+  runtime_honest_bit_identity  the all-honest guarded SPMD runtime run is
+                               exactly the unguarded runtime run
+  hetero_attack_parity         under attack, each defended hetero-basis
+                               ('svd') runtime run degrades off its honest
+                               same-basis reference at most ``hetero_bound``
+                               more than its shared-basis defended twin
+                               does — the re-based robust vote does not
+                               give back the defense on diverged bases
+  quarantine_pipelined_ge_sequential
+                               the quarantined run_rounds scan pipelines:
+                               pipelined wall-clock ≤ sequential ×
+                               ``pipe_noise_tol`` at every timed cohort
 """
 from __future__ import annotations
 
 import argparse
-import json
 import math
 import time
 
-from repro.core.population import ParticipationConfig
+import jax
 
-from .common import emit, run_federated_trial
+from repro.core.population import ParticipationConfig, corruption_schedule
+
+from .common import dump_json, emit, run_federated_trial
 
 ATTACKS = ("nan", "scale")
 DEFENSES = {
@@ -77,8 +99,135 @@ def _cell(attack, defense, *, rounds, n_clients, seed, corrupt_rate):
     }
 
 
+RUNTIME_DEFENSES = {
+    "quarantine+trimmed": dict(quarantine=True, robust_agg="trimmed_mean"),
+    "quarantine+geomedian": dict(quarantine=True, robust_agg="geomedian"),
+}
+
+
+def _make_runtime(n_clients, refresh_mode, seed, local_steps=2, **knobs):
+    from repro.configs import get_config, smoke_variant
+    from repro.fedsim import ShardedFederation
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import TrainSpec
+
+    cfg = smoke_variant(get_config("qwen1.5-0.5b"))
+    mesh = make_host_mesh(1)
+    spec = TrainSpec(rank=4, lr=1e-3, local_steps=local_steps, seed=seed,
+                     refresh_mode=refresh_mode)
+    fed = ShardedFederation(cfg, spec, mesh, n_clients, state_sync="ajive",
+                            seed=seed, **knobs)
+    return cfg, fed
+
+
+def _runtime_batches(cfg, seed, c, local_steps, k_rounds=None, b=2, seq=8):
+    kk = jax.random.PRNGKey(seed)
+    lead = ((c, local_steps, b, seq) if k_rounds is None
+            else (k_rounds, c, local_steps, b, seq))
+    toks = jax.random.randint(kk, lead, 0, cfg.vocab_size)
+    return {"tokens": toks, "labels": toks}
+
+
+def _runtime_attack_grid(rounds, n_clients, seed, corrupt_rate,
+                         local_steps=2):
+    """The SPMD-runtime half of the attack grid: the same seeded 'scale'
+    adversary schedule (``population.corruption_schedule``) injected through
+    ``ShardedFederation.run_round(attack=)``, once on the shared seeded
+    basis and once with diverged per-client bases (``refresh_mode='svd'``,
+    where robust 𝒜/𝒮 re-base onto the reference client before the
+    coordinate-wise vote)."""
+    pcfg = _pcfg(seed, corrupt_rate, ("scale",))
+    sched = corruption_schedule(pcfg, n_clients, rounds)
+    landed = sum(int((m != 1.0).sum()) for m in sched if m is not None)
+
+    cells = {}
+    for mode in ("random", "svd"):
+        cells[mode] = {}
+        # Honest same-basis reference first: 'svd' and 'random' refresh run
+        # genuinely different optimization dynamics, so defense quality is
+        # judged per basis mode as degradation OFF this reference, never by
+        # comparing svd losses to random losses directly.
+        for defense, knobs in [("honest", dict(attack=False))] + [
+                (d, k) for d, k in RUNTIME_DEFENSES.items()]:
+            attacked = knobs.pop("attack", True)
+            cfg, fed = _make_runtime(n_clients, mode, seed,
+                                     local_steps=local_steps, **knobs)
+            curve = []
+            for r in range(rounds):
+                res = fed.run_round(
+                    _runtime_batches(cfg, seed + r, n_clients, local_steps),
+                    attack=sched[r] if attacked else None)
+                curve.append(res["mean_final_loss"])
+            cell = {"loss_curve": curve, "final_loss": curve[-1],
+                    "finite": bool(_finite(curve))}
+            if defense != "honest":
+                # One-sided: the attack's harm is a WORSENED loss. A
+                # defended run landing below the honest reference (the
+                # quarantined cohort is a subset — its trajectory may
+                # legitimately be better on the junk smoke task) is zero
+                # degradation, not negative parity budget.
+                ref = cells[mode]["honest"]["final_loss"]
+                cell["degradation"] = (
+                    max(0.0, curve[-1] - ref) / max(abs(ref), 1e-8)
+                    if cell["finite"] else float("inf"))
+            cells[mode][defense] = cell
+    return cells, landed
+
+
+def _runtime_honest_identity(rounds, n_clients, seed, local_steps=2):
+    """All-honest runtime bit-identity: the guarded program (quarantine on,
+    screen forced all-pass, robust machinery compiled in) against the
+    unguarded default — identical losses round-for-round, exactly."""
+    curves = []
+    for knobs in (dict(),
+                  dict(quarantine=True, quarantine_zmax=HONEST_ZMAX)):
+        cfg, fed = _make_runtime(n_clients, "random", seed,
+                                 local_steps=local_steps, **knobs)
+        curve = []
+        for r in range(rounds):
+            res = fed.run_round(
+                _runtime_batches(cfg, seed + r, n_clients, local_steps))
+            curve.append(res["mean_final_loss"])
+        curves.append(curve)
+    return curves[0] == curves[1], curves[0]
+
+
+def _pipeline_timing(clients=(8, 64), k_rounds=4, local_steps=1,
+                     pipe_noise_tol=1.25, seed=0, reps=2):
+    """Quarantined run_rounds, pipelined vs sequential wall-clock. The
+    quarantined scan now pipelines one round deep (the raw round core
+    returns post-screen effective weights for the deferred 𝒮) — the gate is
+    that it is never slower than the sequential oracle beyond timing
+    noise."""
+    out = {}
+    for c in clients:
+        per = {}
+        for label, pipe in (("pipelined", True), ("sequential", False)):
+            cfg, fed = _make_runtime(
+                c, "random", seed, local_steps=local_steps,
+                quarantine=True, pipeline_sync=pipe)
+            rb = _runtime_batches(cfg, seed, c, local_steps,
+                                  k_rounds=k_rounds, b=1)
+            for _ in range(2):              # compile + steady-state buffers
+                fed.run_rounds(rb)
+
+            def loop(fed=fed, rb=rb):
+                t0 = time.perf_counter()
+                fed.run_rounds(rb)
+                return (time.perf_counter() - t0) / k_rounds
+            per[f"{label}_s"] = min(loop() for _ in range(reps))
+        per["speedup"] = per["sequential_s"] / per["pipelined_s"]
+        per["ok"] = bool(per["pipelined_s"]
+                         <= per["sequential_s"] * pipe_noise_tol)
+        out[str(c)] = per
+        emit(f"robust/quar_pipe_c{c}", per["pipelined_s"] * 1e6,
+             f"speedup={per['speedup']:.2f}x")
+    return out
+
+
 def main(smoke=False, rounds=None, n_clients=4, seed=0, out=None,
-         corrupt_rate=0.2, degradation_bound=1.0):
+         corrupt_rate=0.2, degradation_bound=1.0, hetero_bound=0.02,
+         pipe_clients=(8, 64), pipe_noise_tol=1.25):
     rounds = rounds or (4 if smoke else 8)
     t0 = time.perf_counter()
 
@@ -125,6 +274,32 @@ def main(smoke=False, rounds=None, n_clients=4, seed=0, out=None,
         best = min(degradation[a][d] for d in DEFENDED)
         undefended = degradation[a]["none"]
         bounded[a] = bool(best <= degradation_bound and undefended > best)
+    # -- SPMD runtime: attack parity, hetero re-basing, pipelined quarantine
+    rt_cells, rt_landed = _runtime_attack_grid(
+        rounds, n_clients, seed, corrupt_rate)
+    rt_identity, rt_honest_curve = _runtime_honest_identity(
+        rounds, n_clients, seed)
+    # Hetero attack parity: the defense must work as well over diverged
+    # per-client bases as over the shared basis — compare each cell's
+    # degradation off its own honest same-basis reference (svd and random
+    # refresh run different dynamics; raw loss-vs-loss would conflate basis
+    # dynamics with defense quality). The svd-basis excess degradation over
+    # the shared-basis twin must stay within ``hetero_bound``.
+    hetero_rel = {}
+    for defense in RUNTIME_DEFENSES:
+        shared_c = rt_cells["random"][defense]
+        hetero_c = rt_cells["svd"][defense]
+        if shared_c["finite"] and hetero_c["finite"]:
+            hetero_rel[defense] = max(0.0, hetero_c["degradation"]
+                                      - shared_c["degradation"])
+        else:
+            hetero_rel[defense] = float("inf")
+    hetero_parity = bool(rt_landed > 0 and all(
+        r <= hetero_bound for r in hetero_rel.values()))
+    pipe = _pipeline_timing(clients=pipe_clients,
+                            k_rounds=(4 if smoke else 6),
+                            pipe_noise_tol=pipe_noise_tol, seed=seed)
+
     acceptance = {
         "honest_bit_identity": bool(bit_identity),
         "attacks_landed": bool(attacks_landed),
@@ -136,16 +311,29 @@ def main(smoke=False, rounds=None, n_clients=4, seed=0, out=None,
                             for d, v in degradation[a].items()}
                         for a in ATTACKS},
         "corrupt_rate": float(corrupt_rate),
+        "runtime_attacks_landed": bool(rt_landed > 0),
+        "runtime_honest_bit_identity": bool(rt_identity),
+        "hetero_bound": float(hetero_bound),
+        "hetero_parity_rel": {d: (None if math.isinf(v) else float(v))
+                              for d, v in hetero_rel.items()},
+        "hetero_attack_parity": hetero_parity,
+        "pipe_noise_tol": float(pipe_noise_tol),
+        "quarantine_pipeline": pipe,
+        "quarantine_pipelined_ge_sequential": bool(
+            all(p["ok"] for p in pipe.values())),
     }
     dt = time.perf_counter() - t0
     result = {"config": {"rounds": rounds, "n_clients": n_clients,
                          "seed": seed, "smoke": bool(smoke),
                          "attacks": list(ATTACKS),
                          "defenses": list(DEFENSES),
+                         "runtime_defenses": list(RUNTIME_DEFENSES),
                          "corrupt_rate": corrupt_rate},
               "honest": {"acc": honest["acc"],
                          "val_final": float(honest_val)},
               "grid": grid,
+              "runtime_grid": rt_cells,
+              "runtime_honest_curve": rt_honest_curve,
               "acceptance": acceptance,
               "wall_s": dt}
     best_scale = min(degradation["scale"][d] for d in DEFENDED)
@@ -153,10 +341,12 @@ def main(smoke=False, rounds=None, n_clients=4, seed=0, out=None,
          (f"bitid={int(acceptance['honest_bit_identity'])};"
           f"nan_ok={int(acceptance['nan_quarantined'])};"
           f"scale_best_deg={best_scale:.3f};"
-          f"bounded={int(acceptance['attack_degradation_bounded'])}"))
+          f"bounded={int(acceptance['attack_degradation_bounded'])};"
+          f"hetero_parity={int(acceptance['hetero_attack_parity'])};"
+          f"quar_pipe={int(acceptance['quarantine_pipelined_ge_sequential'])}"
+          ))
     if out:
-        with open(out, "w") as f:
-            json.dump(result, f, indent=1)
+        dump_json(out, result)
     return result
 
 

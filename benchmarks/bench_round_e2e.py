@@ -51,14 +51,13 @@ charges upstream compute to the wrong stage).
 """
 from __future__ import annotations
 
-import json
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.fed import FedConfig, FedEngine
-from .common import emit
+from .common import dump_json, emit
 
 SCAN_ROUNDS = 10        # K for the scan-over-rounds acceptance number
 
@@ -496,8 +495,7 @@ def main(clients=(4, 8, 16), out_path="bench_round_e2e.json",
             **cohort_acc,
         },
     }
-    with open(out_path, "w") as f:
-        json.dump(result, f, indent=1)
+    dump_json(out_path, result)
     return result
 
 

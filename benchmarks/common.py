@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import json
+import math
 import time
 
 import jax
@@ -109,3 +110,27 @@ def run_federated_trial(method: str, alpha, *, rounds=8, n_clients=4,
 
 def emit(name: str, us_per_call: float, derived: str):
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def sanitize_floats(obj):
+    """Recursively replace non-finite floats with None. ``json.dump`` emits
+    bare ``NaN``/``Infinity`` literals for them (legal Python, illegal
+    JSON) — an adversarial bench cell that diverges would otherwise render
+    its whole results file unparseable."""
+    if isinstance(obj, dict):
+        return {k: sanitize_floats(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [sanitize_floats(v) for v in obj]
+    if isinstance(obj, float):
+        return obj if math.isfinite(obj) else None
+    if isinstance(obj, (np.floating, np.integer, np.bool_)):
+        return sanitize_floats(obj.item())
+    return obj
+
+
+def dump_json(path: str, obj):
+    """The shared bench results writer: sanitized floats, strict JSON
+    (``allow_nan=False`` turns any future escape into a loud error instead
+    of an invalid file)."""
+    with open(path, "w") as f:
+        json.dump(sanitize_floats(obj), f, indent=1, allow_nan=False)

@@ -14,11 +14,16 @@
 #                                      # on its acceptance keys
 #        scripts/ci.sh --robust-smoke  # adversary sweep: NaN/scale attacks
 #                                      # vs quarantine + robust factored
-#                                      # aggregation; writes
+#                                      # aggregation, engine AND runtime
+#                                      # (with a coverage floor on the
+#                                      # population adversary layer when
+#                                      # pytest-cov is installed); writes
 #                                      # BENCH_robust.json and gates on
-#                                      # honest bit-identity, NaN
-#                                      # containment, and bounded attack
-#                                      # degradation
+#                                      # honest bit-identity (both drivers),
+#                                      # NaN containment, bounded attack
+#                                      # degradation, hetero-basis attack
+#                                      # parity, and pipelined-quarantine
+#                                      # throughput
 #        scripts/ci.sh --sync-smoke    # batched-bucket 𝒮 + pipelined-scan
 #                                      # leg: runs the sync parity suites
 #                                      # (with a coverage floor on
@@ -150,6 +155,21 @@ fi
 
 if [[ "${1:-}" == "--robust-smoke" ]]; then
     shift
+    # Robustness suite first: operator/property invariants + the guarded
+    # engine/runtime rounds, with a line-coverage floor on the population
+    # adversary layer (cohort plans, corruption schedules) when pytest-cov
+    # is installed.
+    COV_ARGS=()
+    if PYTHONPATH=src python -c "import pytest_cov" 2>/dev/null; then
+        COV_ARGS=(--cov=repro.core.population
+                  --cov-report=term --cov-fail-under=70)
+    else
+        echo "pytest-cov not installed — robust suite runs without the" \
+             "coverage floor"
+    fi
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        ${COV_ARGS[@]+"${COV_ARGS[@]}"} \
+        tests/test_robust.py tests/test_robust_properties.py
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m \
         benchmarks.bench_robust --smoke --out BENCH_robust.json "$@"
     python - <<'EOF'
@@ -157,15 +177,28 @@ import json
 acc = json.load(open("BENCH_robust.json"))["acceptance"]
 print("robust acceptance:", json.dumps(acc, indent=1))
 # Defense-in-depth gates: the all-honest guarded round must be bit-identical
-# to the unguarded round, every NaN-adversary run under a defense must stay
-# finite end-to-end, and for each attack the best defended cell must stay
-# within the degradation bound while the undefended cell degrades strictly
-# more (or diverges).
+# to the unguarded round (engine AND sharded runtime), every NaN-adversary
+# run under a defense must stay finite end-to-end, for each attack the best
+# defended cell must stay within the degradation bound while the undefended
+# cell degrades strictly more (or diverges), the hetero-basis (svd-refresh)
+# defended runs must track their shared-basis twins, and the quarantined
+# pipelined scan must be no slower than the sequential oracle.
 assert acc["attacks_landed"], "adversary plans drew zero corrupted clients"
 assert acc["honest_bit_identity"], "honest guarded round != unguarded round"
 assert acc["nan_quarantined"], "NaN adversary leaked past the quarantine"
 assert acc["attack_degradation_bounded"], (
     f"attack degradation unbounded: {json.dumps(acc['degradation'])}")
+assert acc["runtime_attacks_landed"], "runtime schedule drew zero attacks"
+assert acc["runtime_honest_bit_identity"], (
+    "honest guarded runtime round != unguarded runtime round")
+assert acc["hetero_attack_parity"], (
+    "hetero-basis defended runs diverged from shared-basis twins: "
+    f"{json.dumps(acc['hetero_parity_rel'])} vs bound "
+    f"{acc['hetero_bound']}")
+assert acc["quarantine_pipelined_ge_sequential"], (
+    "quarantined pipelined scan slower than sequential beyond the "
+    f"{acc['pipe_noise_tol']:.2f}x noise tolerance: "
+    f"{json.dumps(acc['quarantine_pipeline'])}")
 EOF
     exit 0
 fi

@@ -201,7 +201,8 @@ def median_norm_clip_factors(delta_stack: jnp.ndarray,
 
 def robust_factored_reduce(delta_stack: jnp.ndarray, weights, mode: str, *,
                            trim: float = 0.2, iters: int = 8,
-                           eps: float = 1e-8) -> jnp.ndarray:
+                           eps: float = 1e-8,
+                           tol: float = 1e-6) -> jnp.ndarray:
     """Robust weighted reduction over the client axis of a factored stack:
     the drop-in replacement for the plain weighted mean inside
     :func:`factored_lift_average` (weights renormalized internally the same
@@ -213,9 +214,14 @@ def robust_factored_reduce(delta_stack: jnp.ndarray, weights, mode: str, *,
                    to the [trim, 1-trim] window (zero-weight clients carry a
                    zero-width interval — excluded for free; trim=0 is
                    exactly the weighted mean).
-    geomedian      ``iters`` Weiszfeld iterations toward the weighted
-                   geometric median of the per-client factors, seeded at the
-                   weighted mean.
+    geomedian      Weiszfeld iterations toward the weighted geometric median
+                   of the per-client factors, seeded at the weighted mean.
+                   ``iters`` caps the iteration count; the loop exits early
+                   once the iterate moves less than ``tol`` × the seed norm
+                   (``tol=0`` always runs the full cap). Zero distances —
+                   the iterate landing exactly on a client point, where
+                   Weiszfeld's 1/d weight is singular — are floored at
+                   ``eps`` so that client's pull stays finite.
 
     Returns the reduced (·, r) factor in fp32.
     """
@@ -237,45 +243,75 @@ def robust_factored_reduce(delta_stack: jnp.ndarray, weights, mode: str, *,
                        - jnp.maximum(cum - ws, trim), 0.0, None)
         return jnp.sum(eff * xs, 0) / jnp.maximum(jnp.sum(eff, 0), eps)
     if mode == "geomedian":
-        y = jnp.einsum("k,k...->...", w, s32)
-        for _ in range(iters):
-            d = jnp.sqrt(jnp.maximum(client_sq_norms(s32 - y[None]),
-                                     eps * eps))
-            inv = w / d                        # zero-weight clients drop out
-            y = jnp.einsum("k,k...->...", inv / jnp.maximum(
+        y0 = jnp.einsum("k,k...->...", w, s32)
+        ref = jnp.sqrt(jnp.sum(y0 * y0)) + eps   # convergence scale
+
+        def _cond(carry):
+            _, i, moved = carry
+            return (i < iters) & (moved > tol * ref)
+
+        def _body(carry):
+            y, i, _ = carry
+            d = jnp.sqrt(client_sq_norms(s32 - y[None]))
+            inv = w / jnp.maximum(d, eps)      # zero-weight clients drop out
+            y_new = jnp.einsum("k,k...->...", inv / jnp.maximum(
                 jnp.sum(inv), eps), s32)
+            moved = jnp.sqrt(jnp.sum((y_new - y) ** 2))
+            return y_new, i + 1, moved
+
+        y, _, _ = jax.lax.while_loop(
+            _cond, _body, (y0, jnp.int32(0), jnp.float32(jnp.inf)))
         return y
     raise ValueError(f"robust_agg mode {mode!r} not in {ROBUST_MODES}")
+
+
+def rebase_factored_stack(stack: jnp.ndarray, basis_stack: jnp.ndarray,
+                          side: str) -> jnp.ndarray:
+    """Re-express every client's factored coordinates on the REFERENCE
+    client's (client 0's) basis via the r×r transfer Grams
+    (:func:`projector.reproject` — right: Rᵢ(BᵢᵀB₀), left: (B₀ᵀBᵢ)Rᵢ), so
+    coordinate-wise robust statistics are well-defined when per-client bases
+    have diverged. The re-basing is a projection: components outside the
+    reference subspace are dropped — exactly the components an aligned
+    coordinate-wise vote cannot adjudicate. Broadcasts over stacked
+    (C, nb, ·, r) scan-block leaves."""
+    s32 = stack.astype(jnp.float32)
+    b32 = basis_stack.astype(jnp.float32)
+    return proj.reproject(s32, b32, b32[0], side)
 
 
 def robust_factored_lift(delta_stack: jnp.ndarray, basis_stack: jnp.ndarray,
                          side: str, weights, mode: str = "none",
                          hetero: bool = False, trim: float = 0.2,
-                         iters: int = 8) -> jnp.ndarray:
+                         iters: int = 8, tol: float = 1e-6) -> jnp.ndarray:
     """Robust 𝒜 for one factored leaf: reduce the (C, ·, r) client stack with
     ``mode`` and lift once. ``mode='none'`` is EXACTLY
     :func:`factored_lift_average` (the guarded round program's honest-cohort
-    bit-identity hinges on this). ``hetero=True`` contracts per-client bases
-    (the adaptive round-0 / ``refresh_mode='svd'`` diverged-basis case);
-    coordinate-wise modes are incoherent across heterogeneous bases, so
-    trimmed_mean/geomedian degrade to median-norm clipping there (clip
-    factors are basis-independent — the quarantine + clip pair is what
-    defends the diverged-basis round)."""
+    bit-identity hinges on this). ``hetero=True`` handles per-client bases
+    (the adaptive round-0 / ``refresh_mode='svd'`` diverged-basis case):
+    norm_clip contracts per-client (clip factors are basis-independent),
+    while the coordinate-wise modes — trimmed_mean/geomedian — first re-base
+    every client onto the reference basis via
+    :func:`rebase_factored_stack`, making them basis-coherent instead of
+    degrading to median-norm clipping."""
     if mode == "none":
         if hetero:
             return factored_lift_average_hetero(delta_stack, basis_stack,
                                                 side, weights)
         return factored_lift_average(delta_stack, basis_stack[0], side,
                                      weights)
-    if hetero or mode == "norm_clip":
+    if mode == "norm_clip":
         c = median_norm_clip_factors(delta_stack, _norm_weights(weights))
         d = (delta_stack.astype(jnp.float32)
              * c.reshape((-1,) + (1,) * (delta_stack.ndim - 1)))
         if hetero:
             return factored_lift_average_hetero(d, basis_stack, side, weights)
         return factored_lift_average(d, basis_stack[0], side, weights)
-    red = robust_factored_reduce(delta_stack, weights, mode, trim=trim,
-                                 iters=iters)
+    d32 = delta_stack.astype(jnp.float32)
+    if hetero:
+        d32 = rebase_factored_stack(d32, basis_stack, side)
+    red = robust_factored_reduce(d32, weights, mode, trim=trim,
+                                 iters=iters, tol=tol)
     return proj.project_back(red, basis_stack[0].astype(jnp.float32), side)
 
 

@@ -225,14 +225,22 @@ def _topk_eig_desc(sym: jnp.ndarray, k: int):
     return lam[:k], vec[:, :k]
 
 
-def _topk_eig_desc_stack(sym: jnp.ndarray, k: int):
+def _topk_eig_desc_stack(sym: jnp.ndarray, k: int,
+                         mask: Optional[jnp.ndarray] = None):
     """Top-k eigenpairs of a (..., n, n) symmetric PSD stack, descending.
 
     One batched solve for the whole stack — kernel-routed through
     :func:`repro.kernels.ops.batched_small_eigh` (Pallas parallel-Jacobi on
     TPU for n ≤ 64; LAPACK on CPU, bit-identical to the per-matrix path).
+
+    ``mask`` (batch-shaped bool) excludes stack entries from the solve: a
+    masked slice is replaced by the identity and its eigenvalues zeroed, so
+    the solver never touches its payload (a masked client's Gram may be
+    non-finite — Jacobi rotations and LAPACK both propagate NaN across the
+    whole slice) and downstream rank-floors drop its directions. An
+    all-true mask is bitwise the unmasked solve.
     """
-    lam, vec = kernel_ops.batched_small_eigh(sym)
+    lam, vec = kernel_ops.batched_small_eigh(sym, mask=mask)
     lam = jnp.maximum(lam[..., ::-1], 0.0)
     vec = vec[..., ::-1]
     return lam[..., :k], vec[..., :k]
@@ -337,16 +345,33 @@ def _participation_mask(weights: Optional[jnp.ndarray],
     the joint basis. With ``exclude_zero_weights`` the mask zeroes the
     dropped clients' score columns before the joint-basis Gram, so zeroed
     columns contribute zero eigenvalues and the joint basis is built from
-    participants only (the participation-masked round's 𝒮 semantics)."""
+    participants only (the participation-masked round's 𝒮 semantics).
+
+    The exclusion is ``jnp.where``-based, not multiplicative: ``0 · NaN``
+    is NaN, so a multiplicative mask would let a quarantined client's
+    non-finite scores poison the joint basis anyway. ``jnp.where`` with an
+    all-true mask returns the scores bitwise unchanged (the honest-cohort
+    bit-identity short-circuit)."""
     if not exclude_zero_weights or weights is None:
         return None
-    return (jnp.asarray(weights, jnp.float32) > 0).astype(jnp.float32)
+    return jnp.asarray(weights, jnp.float32) > 0
+
+
+def _mask_score_cols(scores: jnp.ndarray,
+                     mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Apply the participation mask to (C, ·, k) score stacks (NaN-proof —
+    see :func:`_participation_mask`)."""
+    if mask is None:
+        return scores
+    return jnp.where(mask[:, None, None], scores, jnp.zeros((), scores.dtype))
 
 
 def ajive_sync_factored(v_stack: jnp.ndarray, rank: int,
                         weights: Optional[jnp.ndarray] = None,
                         side: str = "right",
-                        exclude_zero_weights: bool = False) -> jnp.ndarray:
+                        exclude_zero_weights: bool = False,
+                        robust: str = "none", trim: float = 0.2,
+                        iters: int = 8, tol: float = 1e-6) -> jnp.ndarray:
     """Server-side second-moment sync on *projected* moments (Alg. 1 l.12).
 
     The lifted view of client i is ``V^i = ṽ^i Bᵀ`` (right blocks) or
@@ -378,12 +403,22 @@ def ajive_sync_factored(v_stack: jnp.ndarray, rank: int,
     zero-weight clients (see :func:`_participation_mask`): the joint basis
     is then estimated from participating clients only — the semantics of
     the participation-masked round, where a dropped client's local state
-    must not influence the server filter at all.
+    must not influence the server filter at all. The mask also routes the
+    Phase-1 Gram eigendecomposition through the masked batched-eigh path
+    (:func:`_topk_eig_desc_stack`), so excluded clients' Grams are never
+    solved.
+
+    ``robust`` replaces the final weighted joint mean with the matching
+    :func:`aggregation.robust_factored_reduce` mode over the per-client
+    joint components (all expressed on the shared basis — coordinate-wise
+    statistics are well-defined). ``robust='none'`` is bitwise the plain
+    weighted mean.
     """
     if v_stack.ndim == 4:                          # stacked scan blocks
         return jax.vmap(
             lambda vs: ajive_sync_factored(vs, rank, weights, side,
-                                           exclude_zero_weights),
+                                           exclude_zero_weights, robust,
+                                           trim, iters, tol),
             in_axes=1, out_axes=0)(v_stack)
 
     a = v_stack.astype(jnp.float32)                # (C, m, r) | (C, r, n)
@@ -395,11 +430,10 @@ def ajive_sync_factored(v_stack: jnp.ndarray, rank: int,
     if side == "right":
         # Phase 1: per-view economy SVD via the r×r Gram of ṽ^i.
         gram = jnp.einsum("cmr,cms->crs", a, a)            # (C, r, r)
-        lam, wv = _topk_eig_desc_stack(gram, k)
+        lam, wv = _topk_eig_desc_stack(gram, k, mask=mask)
         scores = jnp.einsum("cmr,crk->cmk", a, wv)         # ṽ W
         scores = scores * _inv_sqrt_rank_safe(lam)[:, None, :]
-        if mask is not None:
-            scores = scores * mask[:, None, None]
+        scores = _mask_score_cols(scores, mask)
         u_joint = _joint_basis(scores, k)                  # (m, k)
         joint = jnp.einsum("mj,cjr->cmr", u_joint,
                            jnp.einsum("mj,cmr->cjr", u_joint, a))
@@ -408,22 +442,27 @@ def ajive_sync_factored(v_stack: jnp.ndarray, rank: int,
         # orthonormal B cancels from every Gram, so Phases 1–3 run wholly in
         # the r-dimensional coefficient space.
         gram = jnp.einsum("crn,csn->crs", a, a)            # (C, r, r)
-        _, wv = _topk_eig_desc_stack(gram, k)
-        if mask is not None:
-            wv = wv * mask[:, None, None]
+        _, wv = _topk_eig_desc_stack(gram, k, mask=mask)
+        wv = _mask_score_cols(wv, mask)
         q = _joint_basis(wv, k)                            # (r, k)
         joint = jnp.einsum("rj,cjn->crn", q,
                            jnp.einsum("rj,crn->cjn", q, a))
 
-    return jnp.einsum("c,c...->...", normalize_weights(weights, c_views),
-                      joint)
+    w_final = normalize_weights(weights, c_views)
+    if robust != "none":
+        from . import aggregation as agg
+        return agg.robust_factored_reduce(joint, w_final, robust, trim=trim,
+                                          iters=iters, tol=tol)
+    return jnp.einsum("c,c...->...", w_final, joint)
 
 
 def ajive_sync_hetero_factored(v_stack: jnp.ndarray, b_stack: jnp.ndarray,
                                rank: int,
                                weights: Optional[jnp.ndarray] = None,
                                side: str = "right",
-                               exclude_zero_weights: bool = False
+                               exclude_zero_weights: bool = False,
+                               robust: str = "none", trim: float = 0.2,
+                               iters: int = 8, tol: float = 1e-6
                                ) -> jnp.ndarray:
     """Factored AJIVE 𝒮 for **heterogeneous client bases** (adaptive round 0).
 
@@ -450,13 +489,19 @@ def ajive_sync_hetero_factored(v_stack: jnp.ndarray, b_stack: jnp.ndarray,
     view, ``(n, n)`` projector, or dense broadcast is ever formed. Stacked
     scan blocks (C, nb, ·, r) vmap over nb. ``exclude_zero_weights`` masks
     zero-weight clients' score columns out of the joint-basis estimate (see
-    :func:`ajive_sync_factored`).
+    :func:`ajive_sync_factored`). ``robust`` robustifies the final weighted
+    joint mean exactly as in :func:`ajive_sync_factored` — the per-client
+    joint components are already re-expressed on the client-0 basis by the
+    transfer composition, so coordinate-wise modes are basis-coherent here
+    with no extra re-basing step.
     """
     if v_stack.ndim == 4:                          # stacked scan blocks
         return jax.vmap(
             lambda vs, bs: ajive_sync_hetero_factored(vs, bs, rank, weights,
                                                       side,
-                                                      exclude_zero_weights),
+                                                      exclude_zero_weights,
+                                                      robust, trim, iters,
+                                                      tol),
             in_axes=1, out_axes=0)(v_stack, b_stack)
 
     a = v_stack.astype(jnp.float32)                # (C, m, r) | (C, r, n)
@@ -468,11 +513,10 @@ def ajive_sync_hetero_factored(v_stack: jnp.ndarray, b_stack: jnp.ndarray,
 
     if side == "right":
         gram = jnp.einsum("cmr,cms->crs", a, a)            # (C, r, r)
-        lam, wv = _topk_eig_desc_stack(gram, k)
+        lam, wv = _topk_eig_desc_stack(gram, k, mask=mask)
         scores = jnp.einsum("cmr,crk->cmk", a, wv)
         scores = scores * _inv_sqrt_rank_safe(lam)[:, None, :]
-        if mask is not None:
-            scores = scores * mask[:, None, None]
+        scores = _mask_score_cols(scores, mask)
         u_joint = _joint_basis(scores, k)                  # (m, k)
         joint = jnp.einsum("mj,cjr->cmr", u_joint,
                            jnp.einsum("mj,cmr->cjr", u_joint, a))
@@ -480,14 +524,17 @@ def ajive_sync_hetero_factored(v_stack: jnp.ndarray, b_stack: jnp.ndarray,
         joint = jnp.einsum("cmr,crs->cms", joint, transfer)
     else:
         gram = jnp.einsum("crn,csn->crs", a, a)            # (C, r, r)
-        _, wv = _topk_eig_desc_stack(gram, k)
+        _, wv = _topk_eig_desc_stack(gram, k, mask=mask)
         scores = jnp.einsum("cdr,crk->cdk", b, wv)         # Q_i u^i, skinny
-        if mask is not None:
-            scores = scores * mask[:, None, None]
+        scores = _mask_score_cols(scores, mask)
         u_joint = _joint_basis(scores, k)                  # (dim, k)
         t0 = jnp.einsum("dr,dk->rk", b[0], u_joint)        # Q_0ᵀ U
         ti = jnp.einsum("cdr,dk->crk", b, u_joint)         # Q_iᵀ U
         joint = jnp.einsum("rk,csk,csn->crn", t0, ti, a)
 
-    return jnp.einsum("c,c...->...", normalize_weights(weights, c_views),
-                      joint)
+    w_final = normalize_weights(weights, c_views)
+    if robust != "none":
+        from . import aggregation as agg
+        return agg.robust_factored_reduce(joint, w_final, robust, trim=trim,
+                                          iters=iters, tol=tol)
+    return jnp.einsum("c,c...->...", w_final, joint)

@@ -175,17 +175,24 @@ class FedConfig:
     # robust_agg replaces the weighted mean over factored client deltas in
     # 𝒜: 'norm_clip' (median-of-norms clipping), 'trimmed_mean'
     # (coordinate-wise weighted trim by robust_trim per tail), 'geomedian'
-    # (robust_iters Weiszfeld iterations); heterogeneous-basis rounds
-    # degrade the coordinate-wise modes to norm clipping. The guarded
-    # program is compiled SEPARATELY — with both knobs at their defaults
-    # and no injected attack, rounds run the pre-PR unguarded program, and
-    # an all-honest cohort through the guarded program is bit-identical to
+    # (Weiszfeld iterations, capped at robust_iters and converged early at
+    # relative tolerance robust_tol); heterogeneous-basis rounds re-base
+    # every client's factored stack onto the reference client's basis via
+    # the r×r transfer Grams, so the coordinate-wise modes stay
+    # well-defined when bases diverge. The same robust mode guards 𝒮: the
+    # projected-moment stacks feeding state_sync/ajive are robustly
+    # reduced (and quarantined clients' score columns excluded from the
+    # joint-basis Gram) before spectral extraction. The guarded program is
+    # compiled SEPARATELY — with both knobs at their defaults and no
+    # injected attack, rounds run the pre-PR unguarded program, and an
+    # all-honest cohort through the guarded program is bit-identical to
     # it (all-pass short-circuit; asserted in tests).
     robust_agg: str = "none"
     quarantine: bool = False
     quarantine_zmax: float = 6.0
     robust_trim: float = 0.2
     robust_iters: int = 8
+    robust_tol: float = 1e-6
     # 𝒮 execution shape (state_sync / ajive module docstrings). bucketed_sync
     # groups shape-identical leaves into one vmapped sync program per bucket
     # (batched r×r eigh, kernel-routed on TPU); False keeps the per-leaf loop
@@ -634,6 +641,13 @@ class FedEngine:
         body survives under ``pipeline_sync=False`` as the timing/parity
         oracle."""
         frozen_mutates = self._frozen_mutates()
+        # Robust-𝒮 rides the guarded program only: the deferred 𝒮 drains
+        # (and the hetero0 inline sync) must reduce the projected-moment
+        # stacks with the same robust mode the in-body rounds use, so the
+        # pipelined guarded scan stays numerically the sequential guarded
+        # program. Unguarded scans keep robust="none" — bit-identity with
+        # the pre-robust program.
+        robust = self.cfg.robust_agg if guard else "none"
         if pipelined:
             # Build the slim-sync basis template eagerly: materialized under
             # an active trace it would cache tracers (omnistaging) instead
@@ -715,10 +729,12 @@ class FedEngine:
                     # adopts the first's inline sv0 instead (its bases may
                     # have diverged — the slim shared drain doesn't apply).
                     if not hetero0:
-                        return self._sync_pending(pv, pw, exclude_zero)
+                        return self._sync_pending(pv, pw, exclude_zero,
+                                                  robust=robust)
                     return jax.lax.cond(
                         ridx == round_idx + 1, lambda _: sv0,
-                        lambda _: self._sync_pending(pv, pw, exclude_zero),
+                        lambda _: self._sync_pending(pv, pw, exclude_zero,
+                                                     robust=robust),
                         operand=None)
 
                 sv = jax.lax.cond(ridx == round_idx, lambda _: synced_v,
@@ -738,7 +754,8 @@ class FedEngine:
                         # basis stacks never enter the carry.
                         v_t, b_t = self._sync_uplink(out_opt)
                         return self._sync_states_from_uplink(
-                            v_t, b_t, pend_new[1], ridx, exclude_zero)
+                            v_t, b_t, pend_new[1], ridx, exclude_zero,
+                            robust=robust)
                     sv0 = jax.lax.cond(ridx == round_idx, inline0,
                                        lambda _: sv0, operand=None)
                     new_carry = ((g_tr, fz, pend_new, sv0, ridx + 1)
@@ -774,7 +791,7 @@ class FedEngine:
                 sv = rest[1]
             else:
                 pv, pw = pend
-                sv = self._sync_pending(pv, pw, exclude_zero)
+                sv = self._sync_pending(pv, pw, exclude_zero, robust=robust)
             carry = ((g_tr, fz, sv, ridx) if frozen_mutates
                      else (g_tr, sv, ridx))
             return carry, losses
@@ -962,12 +979,14 @@ class FedEngine:
             def shared(_):
                 return agg.robust_factored_lift(
                     d_stack, b_stack, side, w, robust, hetero=False,
-                    trim=self.cfg.robust_trim, iters=self.cfg.robust_iters)
+                    trim=self.cfg.robust_trim, iters=self.cfg.robust_iters,
+                    tol=self.cfg.robust_tol)
 
             def hetero(_):
                 return agg.robust_factored_lift(
                     d_stack, b_stack, side, w, robust, hetero=True,
-                    trim=self.cfg.robust_trim, iters=self.cfg.robust_iters)
+                    trim=self.cfg.robust_trim, iters=self.cfg.robust_iters,
+                    tol=self.cfg.robust_tol)
 
             if round0_hetero:
                 lifted = jax.lax.cond(round_idx == 0, hetero, shared,
@@ -1041,8 +1060,9 @@ class FedEngine:
 
         ``attack`` (guarded variant only) is the (C,) per-client corruption
         multiplier injected after the local phase; its presence also arms
-        the quarantine screen and robust 𝒜 per the config
-        (:meth:`_apply_guard`).
+        the quarantine screen and robust 𝒜/𝒮 per the config
+        (:meth:`_apply_guard`; the same ``robust_agg`` mode guards the
+        projected-moment reductions inside 𝒮).
 
         ``skip_sync`` is the pipelined-scan building block: instead of
         installing 𝒮's result here, the ``new_synced`` slot returns the
@@ -1121,10 +1141,12 @@ class FedEngine:
                 robust=robust)
             if skip_sync:
                 new_synced = (self._slim_payload(out_opt, w, round_idx,
-                                                 exclude_zero), w)
+                                                 exclude_zero,
+                                                 robust=robust), w)
             else:
                 new_synced = self._sync_states_pure(out_opt, w, round_idx,
-                                                    exclude_zero)
+                                                    exclude_zero,
+                                                    robust=robust)
             return out_d, out_opt, new_global, frozen, new_synced, losses
 
         stacked = jax.tree_util.tree_map(
@@ -1335,7 +1357,7 @@ class FedEngine:
         return self.spec.state_sync in ("avg", "avg_svd")
 
     def _slim_payload(self, stacked_opt_states, w, round_idx,
-                      exclude_zero: bool):
+                      exclude_zero: bool, robust: str = "none"):
         """The ``skip_sync`` pending payload for one round: the fully
         synced tree for the weighted-mean protocols (via the normal
         :meth:`_sync_states_pure` — its internal round-0 cond covers the
@@ -1345,7 +1367,7 @@ class FedEngine:
         (see :meth:`_slim_reduces_in_body`)."""
         if self._slim_reduces_in_body():
             return self._sync_states_pure(stacked_opt_states, w, round_idx,
-                                          exclude_zero)
+                                          exclude_zero, robust=robust)
         return self._slim_uplink(stacked_opt_states)
 
     def _basis_template(self):
@@ -1360,7 +1382,8 @@ class FedEngine:
                 b, is_leaf=lambda x: x is None)
         return self._basis_template_tree
 
-    def _sync_pending(self, v_tree, w, exclude_zero: bool = False):
+    def _sync_pending(self, v_tree, w, exclude_zero: bool = False,
+                      robust: str = "none"):
         """Drain one slim pending payload (see :meth:`_slim_payload`):
         passthrough for the weighted-mean protocols (fully synced
         in-body, any round), shared-basis factored 𝒮 on the carried
@@ -1371,7 +1394,7 @@ class FedEngine:
             return v_tree
         return self._sync_states_from_uplink(
             v_tree, self._basis_template(), w, None, exclude_zero,
-            shared_only=True)
+            shared_only=True, robust=robust)
 
     def _sync_blocks(self, v_stack_tree, basis_tree, block_fn,
                      bucketed: bool = False):
@@ -1391,7 +1414,7 @@ class FedEngine:
         return jax.tree_util.tree_unflatten(treedef, synced)
 
     def _sync_states_pure(self, stacked_opt_states, w, round_idx,
-                          exclude_zero: bool = False):
+                          exclude_zero: bool = False, robust: str = "none"):
         """Factored 𝒮 for the fused round: shared-basis rounds synchronize on
         the projected ṽ directly (no lift); the adaptive round-0 diverged-
         basis case runs the heterogeneous-basis factored sync (r×r transfer
@@ -1403,17 +1426,21 @@ class FedEngine:
             return None
         v_tree, b_tree = self._sync_uplink(stacked_opt_states)
         return self._sync_states_from_uplink(v_tree, b_tree, w, round_idx,
-                                             exclude_zero)
+                                             exclude_zero, robust=robust)
 
     def _sync_states_from_uplink(self, v_stack_tree, basis_tree, w, round_idx,
                                  exclude_zero: bool = False,
-                                 shared_only: bool = False):
+                                 shared_only: bool = False,
+                                 robust: str = "none"):
         """𝒮 on an extracted uplink payload (see :meth:`_sync_uplink`) —
         shared with the pipelined scan drivers, which sync the *previous*
         round's carried payload at the top of the next round's body.
         ``shared_only`` statically drops the adaptive round-0 hetero branch
         (callers guarantee round ≥ 1); ``basis_tree`` then only donates
-        per-leaf rank/side shapes and may be a single-client template."""
+        per-leaf rank/side shapes and may be a single-client template.
+        ``robust`` (guarded rounds) swaps the weighted-mean reductions over
+        the projected-moment stacks inside the sync protocols for the
+        robust estimator (``'none'`` is exactly the plain path — bitwise)."""
         protocol = self.spec.state_sync
         round0_hetero_possible = (not shared_only
                                   and self.galore_cfg.adaptive_steps > 0
@@ -1428,12 +1455,16 @@ class FedEngine:
                 # next-round transfer at InitState.
                 return sync_lib.sync_block_synced_factored(
                     protocol, v_stack, side, w, rank,
-                    exclude_zero_weights=exclude_zero)
+                    exclude_zero_weights=exclude_zero, robust=robust,
+                    trim=self.cfg.robust_trim, iters=self.cfg.robust_iters,
+                    tol=self.cfg.robust_tol)
 
             def hetero(_):
                 return sync_lib.sync_block_hetero_factored(
                     protocol, v_stack, b_stack, side, w, rank,
-                    exclude_zero_weights=exclude_zero)
+                    exclude_zero_weights=exclude_zero, robust=robust,
+                    trim=self.cfg.robust_trim, iters=self.cfg.robust_iters,
+                    tol=self.cfg.robust_tol)
 
             if not round0_hetero_possible:
                 return shared(None)

@@ -257,6 +257,22 @@ def corruption_multipliers(plan: CohortPlan,
     return mult
 
 
+def corruption_schedule(pcfg: ParticipationConfig, cohort: int,
+                        rounds: int, start_round: int = 0,
+                        population: Optional[int] = None) -> list:
+    """The seeded K-round attack schedule: one
+    :func:`corruption_multipliers` entry per round (None for honest
+    rounds), drawn from the same deterministic (seed, round) plans the
+    participation layer uses. This is the shared attack operand source for
+    engine AND runtime drivers — both sides of an attack-parity grid feed
+    identical multipliers into ``run_round(attack=)``, so any divergence is
+    the round program's, not the adversary's."""
+    return [corruption_multipliers(
+                sample_cohort(pcfg, cohort, start_round + k, population),
+                pcfg)
+            for k in range(int(rounds))]
+
+
 # ------------------------------------------------------ client-state store --
 
 def _flatten_with_keys(tree: PyTree):

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 
 from .ajive import (_inv_sqrt_rank_safe, ajive_sync, ajive_sync_factored,
                     ajive_sync_hetero_factored, normalize_weights)
+from . import aggregation as agg
 from . import projector as proj
 
 PyTree = Any
@@ -138,7 +139,9 @@ def sync_block(protocol: str, v_stack: jnp.ndarray, old_basis: jnp.ndarray,
 def sync_block_synced_factored(protocol: str, v_stack: jnp.ndarray, side: str,
                                weights=None,
                                rank: Optional[int] = None,
-                               exclude_zero_weights: bool = False
+                               exclude_zero_weights: bool = False,
+                               robust: str = "none", trim: float = 0.2,
+                               iters: int = 8, tol: float = 1e-6
                                ) -> Optional[jnp.ndarray]:
     """Run protocol 𝒮 in projected coordinates (no lift): returns the synced
     state expressed on the *round-k* basis, or None for 'none'.
@@ -147,19 +150,33 @@ def sync_block_synced_factored(protocol: str, v_stack: jnp.ndarray, side: str,
     clients carrying zero aggregation weight (dropped / straggling this
     round) are excluded from the AJIVE joint-basis estimate, not just from
     the final weighted mean (averaging protocols exclude them already —
-    zero weights vanish from a weighted mean)."""
+    zero weights vanish from a weighted mean).
+
+    ``robust`` extends the 𝒜-side defense (``FedConfig.robust_agg``) to the
+    projected-moment stacks: the protocol's final weighted mean over the
+    (C, ·, r) stack is replaced by the matching
+    :func:`aggregation.robust_factored_reduce` mode (trimmed-mean /
+    geomedian / norm-clip in factored coordinates), so one poisoned moment
+    upload cannot drag the synchronized state every honest client inherits.
+    ``robust='none'`` is EXACTLY the unguarded reduction — the guarded
+    program's honest-cohort bit-identity hinges on this."""
     if protocol == "none":
         return None
     if protocol in ("avg", "avg_svd"):
         # Lift is linear ⇒ averaging commutes with it; the rank-r SVD
         # re-projection in avg_svd is the identity on a rank-≤r lift.
+        if robust != "none":
+            return agg.robust_factored_reduce(v_stack, weights, robust,
+                                              trim=trim, iters=iters, tol=tol)
         w = normalize_weights(weights, v_stack.shape[0])
         return jnp.einsum("k,k...->...", w, v_stack.astype(jnp.float32))
     if protocol == "ajive":
         r = rank if rank is not None else (
             v_stack.shape[-1] if side == proj.RIGHT else v_stack.shape[-2])
         return ajive_sync_factored(v_stack, rank=r, weights=weights, side=side,
-                                   exclude_zero_weights=exclude_zero_weights)
+                                   exclude_zero_weights=exclude_zero_weights,
+                                   robust=robust, trim=trim, iters=iters,
+                                   tol=tol)
     raise ValueError(protocol)
 
 
@@ -216,7 +233,9 @@ def _hetero_avg_svd(v32, b32, w, rank, side):
 def sync_block_hetero_factored(protocol: str, v_stack: jnp.ndarray,
                                b_stack: jnp.ndarray, side: str, weights=None,
                                rank: Optional[int] = None,
-                               exclude_zero_weights: bool = False
+                               exclude_zero_weights: bool = False,
+                               robust: str = "none", trim: float = 0.2,
+                               iters: int = 8, tol: float = 1e-6
                                ) -> Optional[jnp.ndarray]:
     """Factored 𝒮 for **heterogeneous client bases** (the adaptive round-0
     case): each client lifted with its own basis, so the shared-basis
@@ -225,14 +244,27 @@ def sync_block_hetero_factored(protocol: str, v_stack: jnp.ndarray,
     transfer Grams ``Q_iᵀ Q_0`` (see :func:`ajive_sync_hetero_factored`),
     eliminating the last dense per-client lift. Returns the synced state in
     projected shape on the client-0 basis (the dense per-client-lift
-    :func:`sync_block`-style oracle's output), or None for 'none'."""
+    :func:`sync_block`-style oracle's output), or None for 'none'.
+
+    ``robust`` mirrors :func:`sync_block_synced_factored`: for the averaging
+    protocols the moment stacks are first re-based onto the client-0
+    coordinates (:func:`aggregation.rebase_factored_stack` — basis-coherent
+    robust statistics under diverged bases) and then robustly reduced.
+    Robust avg_svd reduces on the re-based coordinates, where every stack
+    row is already rank ≤ r on the reference subspace, so the rank-r SVD
+    re-projection is the identity and the mode coincides with robust avg
+    (the out-of-subspace residual a robust vote cannot adjudicate is
+    dropped). AJIVE's joint output is already expressed on client 0, so its
+    final reduction robustifies directly."""
     if protocol == "none":
         return None
     if v_stack.ndim == 4:                      # stacked scan blocks (C,nb,·,r)
         return jax.vmap(
             lambda vs, bs: sync_block_hetero_factored(protocol, vs, bs, side,
                                                       weights, rank,
-                                                      exclude_zero_weights),
+                                                      exclude_zero_weights,
+                                                      robust, trim, iters,
+                                                      tol),
             in_axes=1, out_axes=0)(v_stack, b_stack)
     r = b_stack.shape[-1]
     rank = rank if rank is not None else r
@@ -242,7 +274,12 @@ def sync_block_hetero_factored(protocol: str, v_stack: jnp.ndarray,
     if protocol == "ajive":
         return ajive_sync_hetero_factored(
             v32, b32, rank, weights, side,
-            exclude_zero_weights=exclude_zero_weights)
+            exclude_zero_weights=exclude_zero_weights,
+            robust=robust, trim=trim, iters=iters, tol=tol)
+    if robust != "none" and protocol in ("avg", "avg_svd"):
+        based = agg.rebase_factored_stack(v32, b32, side)
+        return agg.robust_factored_reduce(based, weights, robust,
+                                          trim=trim, iters=iters, tol=tol)
     if protocol == "avg":
         t = transfer_grams(b32)                            # (C, r, r)
         if side == proj.RIGHT:

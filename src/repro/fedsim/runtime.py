@@ -56,9 +56,10 @@ round k+1's first local update still consumes round-k *synced* moments, and
 the parity suite pins pipelined ≡ sequential bit-tight — but it lets XLA
 overlap the r×r sync chain with round k+1's independent gradient work
 instead of serializing 𝒮 between rounds. ``pipeline_sync=False`` keeps the
-strictly sequential scan as the oracle; quarantine mode always runs
-sequentially (the quarantine screen rewrites effective weights inside the
-round, which the deferred 𝒮 cannot observe).
+strictly sequential scan as the oracle. Quarantined scans pipeline too: the
+raw round core returns its post-screen effective weights
+(``return_weights``), which ride the scan carry so the deferred 𝒮 reduces
+over exactly the clients the quarantine kept.
 
 This is the production counterpart of core.fed.FedEngine (which vmaps
 clients on a single host).
@@ -101,7 +102,8 @@ class ShardedFederation:
                      pop_lib.ParticipationConfig] = None,
                  robust_agg: str = "none", quarantine: bool = False,
                  quarantine_zmax: float = 6.0, robust_trim: float = 0.2,
-                 robust_iters: int = 8, bucketed_sync: bool = True,
+                 robust_iters: int = 8, robust_tol: float = 1e-6,
+                 bucketed_sync: bool = True,
                  pipeline_sync: bool = True):
         self.cfg = cfg
         self.spec = spec
@@ -145,16 +147,22 @@ class ShardedFederation:
         # Defense knobs lower INSIDE the round program (steps.
         # make_fed_round_step): quarantine screens the factored uplink and
         # folds failures into the zero-weight mask path; robust_agg swaps
-        # 𝒜's weighted mean for a robust factored reduction. Defaults lower
-        # the pre-defense program unchanged; there is no attack-injection
-        # operand in the SPMD round (corruption arrives only as genuinely
-        # corrupted client state — the engine covers injection testing).
+        # the weighted means of 𝒜 AND 𝒮 for robust factored reductions
+        # (heterogeneous bases re-based onto client 0 via transfer Grams).
+        # Defaults lower the pre-defense program unchanged. The engine-
+        # parity (C,) attack-injection operand rides run_round(attack=) —
+        # the guarded (exclusion-aware) program applies it to each client's
+        # uplink before the screen.
         self._step_kwargs = dict(
             factored_sync=factored_sync, factored_clients=factored_clients,
             client_chunk=client_chunk, lift_free=lift_free,
             robust_agg=robust_agg, quarantine=quarantine,
             quarantine_zmax=quarantine_zmax, robust_trim=robust_trim,
-            robust_iters=robust_iters, bucketed_sync=bucketed_sync)
+            robust_iters=robust_iters, robust_tol=robust_tol,
+            bucketed_sync=bucketed_sync)
+        self._robust_sync_kwargs = dict(
+            robust_agg=robust_agg, robust_trim=robust_trim,
+            robust_iters=robust_iters, robust_tol=robust_tol)
         self._round_core = steps_lib.make_fed_round_step(
             cfg, spec, n_clients,
             state_sync=(state_sync if fused_round else None),
@@ -196,6 +204,20 @@ class ShardedFederation:
                              "round needs >= 1 on-time participant")
         return None if m.all() else m
 
+    def _canon_attack(self, attack):
+        """Canonicalize a (C,) per-client corruption-multiplier operand.
+        An all-ones vector IS the honest round — short-circuit to None so
+        the unmasked program runs, bit-identical to no attack at all. (A
+        NaN entry never compares equal to 1, so corrupted vectors always
+        reach the guarded program.)"""
+        if attack is None:
+            return None
+        a = np.asarray(attack, np.float32).reshape(-1)
+        if a.shape != (self.n_clients,):
+            raise ValueError(f"attack shape {a.shape} != cohort "
+                             f"({self.n_clients},)")
+        return None if bool(np.all(a == 1.0)) else jnp.asarray(a)
+
     def _masked_round(self):
         if self._round_masked is None:
             self._round_masked_core = steps_lib.make_fed_round_step(
@@ -212,7 +234,8 @@ class ShardedFederation:
                 if weights is None else weights)
 
     def run_round(self, batches: PyTree,
-                  weights: Optional[jnp.ndarray] = None, mask=None):
+                  weights: Optional[jnp.ndarray] = None, mask=None,
+                  attack=None):
         """batches: pytree with leading (C, T, b, ...) axes.
 
         ``mask`` (optional bool (C,)) marks the round's on-time
@@ -220,18 +243,36 @@ class ShardedFederation:
         zero effective weight (the in-program normalization renormalizes
         over the participants) and are excluded from the AJIVE joint basis.
         An all-true mask short-circuits onto the unmasked program —
-        bit-identical to calling without a mask."""
+        bit-identical to calling without a mask.
+
+        ``attack`` (optional (C,) float) is the engine-parity per-client
+        corruption multiplier (``core.fed.FedEngine.run_round(attack=)``):
+        each client's factored uplink — accumulators and projected moments —
+        is multiplied by its entry after the local phase, before the
+        quarantine screen, inside the SPMD round program. Attacked rounds
+        run the exclusion-aware guarded program (zero-weight clients leave
+        the AJIVE joint basis — an exact no-op on all-positive weights,
+        matching the engine's guarded jit); an all-ones attack
+        short-circuits onto the honest program, bit-identical to no attack.
+        Requires the fused factored round."""
         mask = self._canon_mask(mask)
+        attack = self._canon_attack(attack)
+        if attack is not None and not self.fused_round:
+            raise ValueError("attack injection requires fused_round=True "
+                             "(the legacy host-𝒮 round syncs with pre-"
+                             "quarantine weights)")
         w = self._base_weights(weights)
-        if mask is None:
+        if mask is None and attack is None:
             round_fn = self._round
         else:
             round_fn = self._masked_round()
-            w = w * jnp.asarray(mask, w.dtype)
+            if mask is not None:
+                w = w * jnp.asarray(mask, w.dtype)
+        extra = () if attack is None else (attack,)
         with self.mesh:
             new_global, out_states, losses, v_upload = round_fn(
                 self.global_trainable, self.frozen, self.opt_states,
-                batches, w)
+                batches, w, *extra)
         self.global_trainable = new_global
         if self.fused_round:
             # 𝒮 already ran in-mesh; the returned states are next-round-ready.
@@ -288,10 +329,33 @@ class ShardedFederation:
             if self._rounds_scan is None:
                 if pipelined:
                     self._raw_round()    # builds _round_core_raw
+                    quar = self.quarantine
 
                     def scan_rounds(global_trainable, frozen, opt_states,
                                     bat, w):
-                        sync = self._make_scan_sync(False)
+                        sync = self._make_scan_sync(quar)
+                        if quar:
+                            # Quarantined rounds rewrite the effective
+                            # weights inside the round; the raw core
+                            # returns them (return_weights) and they ride
+                            # the carry so the deferred 𝒮 reduces over the
+                            # survivors only — this is what lets the
+                            # quarantined scan pipeline one round deep
+                            # like the honest path.
+                            def body(carry, round_b):
+                                g_tr, states, first, w_prev = carry
+                                states = jax.lax.cond(
+                                    first, lambda s: s,
+                                    lambda s: sync(s, w_prev), states)
+                                g_tr, states, losses, _, w_eff = \
+                                    self._round_core_raw(
+                                        g_tr, frozen, states, round_b, w)
+                                return (g_tr, states, jnp.zeros((), bool),
+                                        w_eff), losses
+                            (g_tr, states, _, w_last), losses = jax.lax.scan(
+                                body, (global_trainable, opt_states,
+                                       jnp.ones((), bool), w), bat)
+                            return (g_tr, sync(states, w_last)), losses
 
                         def body(carry, round_b):
                             g_tr, states, first = carry
@@ -327,6 +391,7 @@ class ShardedFederation:
             if self._rounds_scan_masked is None:
                 if pipelined:
                     self._raw_round()    # builds _round_core_raw
+                    quar = self.quarantine
 
                     def scan_rounds_masked(global_trainable, frozen,
                                            opt_states, bat, w_rounds):
@@ -336,15 +401,23 @@ class ShardedFederation:
                             round_b, w_r = xs
                             g_tr, states, first, w_prev = carry
                             # 𝒮 of the *previous* round uses that round's
-                            # mask-zeroed weights, carried alongside the
-                            # unsynced states.
+                            # mask-zeroed (and, under quarantine, post-
+                            # screen effective) weights, carried alongside
+                            # the unsynced states.
                             states = jax.lax.cond(
                                 first, lambda s: s, lambda s: sync(s, w_prev),
                                 states)
-                            g_tr, states, losses, _ = self._round_core_raw(
-                                g_tr, frozen, states, round_b, w_r)
+                            if quar:
+                                g_tr, states, losses, _, w_eff = \
+                                    self._round_core_raw(
+                                        g_tr, frozen, states, round_b, w_r)
+                            else:
+                                g_tr, states, losses, _ = \
+                                    self._round_core_raw(
+                                        g_tr, frozen, states, round_b, w_r)
+                                w_eff = w_r
                             return (g_tr, states, jnp.zeros((), bool),
-                                    w_r), losses
+                                    w_eff), losses
                         (g_tr, states, _, w_last), losses = jax.lax.scan(
                             body, (global_trainable, opt_states,
                                    jnp.ones((), bool), w_rounds[0]),
@@ -377,13 +450,13 @@ class ShardedFederation:
     # ------------------------------------------------ pipelined rounds ------
     def _pipeline_rounds(self) -> bool:
         """Whether :meth:`run_rounds` scans the one-round-deep pipelined
-        schedule. Requires a fused round whose method actually syncs;
-        quarantine is excluded because the quarantine screen rewrites the
-        effective weights *inside* the round program and the raw round does
-        not return them — the deferred 𝒮 could not reproduce the
-        post-quarantine weighting."""
+        schedule. Requires a fused round whose method actually syncs.
+        Quarantined scans pipeline too: the raw round core returns the
+        post-screen effective weights (``return_weights``), which ride the
+        scan carry so the deferred 𝒮 reproduces the post-quarantine
+        weighting exactly."""
         return (self.pipeline_sync and self.fused_round
-                and self.state_sync != "none" and not self.quarantine)
+                and self.state_sync != "none")
 
     def _raw_round(self):
         """Raw (state_sync=None) round core for the pipelined scans: the
@@ -391,26 +464,28 @@ class ShardedFederation:
         round must return unsynced states. One core serves masked and
         unmasked scans — ``exclude_zero_weights`` only alters the in-round
         sync tail, which the raw core never runs (the deferred
-        `_make_scan_sync` carries the exclusion instead)."""
+        `_make_scan_sync` carries the exclusion instead). Under quarantine
+        the core also returns the round's post-screen effective weights
+        for the deferred 𝒮 to consume."""
         if self._round_core_raw is None:
             self._round_core_raw = steps_lib.make_fed_round_step(
                 self.cfg, self.spec, self.n_clients, state_sync=None,
-                **self._step_kwargs)
+                return_weights=self.quarantine, **self._step_kwargs)
 
     def _make_scan_sync(self, exclude_zero: bool):
         """The deferred 𝒮 + install + seed bump used by the pipelined scan
         bodies and the post-scan drain — exactly the fused round's sync tail
         (`steps.sync_client_states`), applied one round late. Weight
         normalization is internal to the sync protocols, so passing the raw
-        (mask-zeroed) round weights is equivalent to the in-round
-        normalized weights."""
+        (mask-zeroed, or post-quarantine effective) round weights is
+        equivalent to the in-round normalized weights."""
         def sync(states, w):
             return steps_lib.sync_client_states(
                 states, w, self.n_clients, self.state_sync,
                 factored=self.factored_sync,
                 bases_shared=self._bases_shared(),
                 exclude_zero_weights=exclude_zero,
-                bucketed=self.bucketed_sync)
+                bucketed=self.bucketed_sync, **self._robust_sync_kwargs)
         return sync
 
     # ---------------------------------------------- 𝒮 (eager reference) -----
@@ -424,7 +499,7 @@ class ShardedFederation:
             out_states, w, self.n_clients, self.state_sync,
             factored=self.factored_sync, bases_shared=self._bases_shared(),
             exclude_zero_weights=exclude_zero,
-            bucketed=self.bucketed_sync)
+            bucketed=self.bucketed_sync, **self._robust_sync_kwargs)
 
     def _bases_shared(self) -> bool:
         """The shared-basis factored sync requires every client on the

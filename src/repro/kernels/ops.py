@@ -48,7 +48,7 @@ def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk=128):
     return _rwkv6(r, k, v, w, u, s0, chunk=chunk, interpret=_interpret())
 
 
-def batched_small_eigh(a, *, force=None, sweeps=12, block_b=8):
+def batched_small_eigh(a, *, mask=None, force=None, sweeps=12, block_b=8):
     """Eigendecomposition of a batched symmetric stack ``(..., n, n)``.
 
     Returns ``(lam, vec)`` ascending, matching ``jnp.linalg.eigh``. Routing:
@@ -58,13 +58,29 @@ def batched_small_eigh(a, *, force=None, sweeps=12, block_b=8):
     already optimal, so the jnp path is the default — bit-identical to the
     pre-kernel behavior. ``force`` pins a path for parity tests:
     ``"jacobi"`` (interpret-mode on CPU) or ``"lapack"``.
+
+    ``mask`` (bool, shaped like the batch dims ``a.shape[:-2]``) is the
+    quarantine/participation bucket path: masked entries are solved as the
+    identity (their payload never reaches the solver — both Jacobi rotations
+    and LAPACK propagate a single NaN across the whole slice) and their
+    eigenvalues are returned as exact zeros, so rank-revealing floors
+    downstream drop the directions. The select is elementwise, so an
+    all-true mask is bitwise identical to ``mask=None``.
     """
     n = a.shape[-1]
+    if mask is not None:
+        sel = jnp.asarray(mask, bool)[..., None, None]
+        a = jnp.where(sel, a, jnp.eye(n, dtype=a.dtype))
     use_jacobi = (force == "jacobi" or
                   (force is None and not _interpret() and n <= MAX_JACOBI_DIM))
     if force == "lapack":
         use_jacobi = False
     if use_jacobi:
-        return _jacobi_eigh(a, sweeps=sweeps, block_b=block_b,
-                            interpret=_interpret())
-    return jnp.linalg.eigh(a)
+        lam, vec = _jacobi_eigh(a, sweeps=sweeps, block_b=block_b,
+                                interpret=_interpret())
+    else:
+        lam, vec = jnp.linalg.eigh(a)
+    if mask is not None:
+        lam = jnp.where(jnp.asarray(mask, bool)[..., None], lam,
+                        jnp.zeros((), lam.dtype))
+    return lam, vec

@@ -184,7 +184,11 @@ def make_fed_local_step(cfg: ArchConfig, spec: TrainSpec,
 def sync_client_states(out_st, w, n_clients: int, state_sync: str,
                        factored: bool, bases_shared: bool,
                        exclude_zero_weights: bool = False,
-                       bucketed: bool = True):
+                       bucketed: bool = True,
+                       robust_agg: str = "none",
+                       robust_trim: float = 0.2,
+                       robust_iters: int = 8,
+                       robust_tol: float = 1e-6):
     """Server-side 𝒮 + next-round install on client-stacked optimizer states
     (the in-mesh tail of the round program; also usable eagerly).
 
@@ -199,7 +203,12 @@ def sync_client_states(out_st, w, n_clients: int, state_sync: str,
     final weighted mean, not from the unweighted joint-subspace phases.
     ``bucketed`` runs shape-identical leaves as one vmapped program per
     bucket (`state_sync.map_sync_leaves`); False keeps the per-leaf loop as
-    the parity oracle.
+    the parity oracle. ``robust_agg`` is robust 𝒮: the weighted-mean
+    reductions over the projected-moment stacks inside the factored sync
+    protocols are swapped for the robust estimator (trimmed-mean /
+    geomedian; heterogeneous bases are first re-based onto the client-0
+    basis via the r×r transfer Grams) — ``'none'`` lowers exactly the plain
+    program, bitwise.
     """
     g_stack = gal.galore_state_of(out_st)
     if state_sync != "none":
@@ -221,13 +230,17 @@ def sync_client_states(out_st, w, n_clients: int, state_sync: str,
                 # projector. Result is the O(dim·r) projected state.
                 return jnp.maximum(sync_lib.sync_block_synced_factored(
                     state_sync, v_stack, side, w, rank,
-                    exclude_zero_weights=exclude_zero_weights), 0.0)
+                    exclude_zero_weights=exclude_zero_weights,
+                    robust=robust_agg, trim=robust_trim, iters=robust_iters,
+                    tol=robust_tol), 0.0)
             # Diverged bases (data-driven refreshes): the lift → 𝒮 →
             # re-project round-trip closes over r×r transfer Grams —
             # the dense per-client lift stays a parity oracle.
             return jnp.maximum(sync_lib.sync_block_hetero_factored(
                 state_sync, v_stack, b_stack, side, w, rank,
-                exclude_zero_weights=exclude_zero_weights), 0.0)
+                exclude_zero_weights=exclude_zero_weights,
+                robust=robust_agg, trim=robust_trim, iters=robust_iters,
+                tol=robust_tol), 0.0)
 
         synced_leaves = sync_lib.map_sync_leaves(leaf_fn, vs, bs,
                                                  bucketed=bucketed)
@@ -278,7 +291,9 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
                         quarantine_zmax: float = 6.0,
                         robust_trim: float = 0.2,
                         robust_iters: int = 8,
-                        bucketed_sync: bool = True) -> Callable:
+                        robust_tol: float = 1e-6,
+                        bucketed_sync: bool = True,
+                        return_weights: bool = False) -> Callable:
     """A full federated round (Algorithm 1) as one SPMD program:
 
       broadcast (implicit: clients start from the shared global base) →
@@ -319,12 +334,26 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
     stacks, excluded from the AJIVE score Gram; ``robust_agg`` swaps the
     weighted mean in 𝒜 for a robust reduction
     (``aggregation.robust_factored_lift`` — heterogeneous-basis 'svd' rounds
-    degrade the coordinate-wise modes to median-norm clipping). Both require
-    the factored client round. All-honest cohorts short-circuit bitwise onto
-    the unguarded math; the defaults lower a program byte-for-byte identical
-    to the pre-defense one. There is no attack-injection operand in the SPMD
-    round — corruption reaches this program only through genuinely corrupted
-    client state (the engine's ``run_round(attack=)`` covers injection).
+    re-base every client's stack onto the client-0 basis via the r×r
+    transfer Grams, so the coordinate-wise modes stay well-defined), and the
+    same mode robustifies 𝒮's projected-moment reductions
+    (``sync_client_states``). Both require the factored client round.
+    All-honest cohorts short-circuit bitwise onto the unguarded math; the
+    defaults lower a program byte-for-byte identical to the pre-defense one.
+
+    The returned ``round_step`` additionally accepts an optional trailing
+    ``attack`` operand — the engine-parity ``(C,)`` per-client corruption
+    multiplier, applied to each client's factored accumulators AND projected
+    moments after the local phase, *before* the quarantine screen (exactly
+    ``core.fed.FedEngine._apply_guard``'s injection order). ``attack=None``
+    (the default) lowers a program with no injection code at all, so honest
+    callers are untouched. Injection requires the factored client round.
+
+    ``return_weights`` appends the post-quarantine renormalized effective
+    weight vector as a final output — the pipelined-scan building block:
+    the runtime's quarantined ``run_rounds`` carries these weights so the
+    deferred next-round 𝒮 reduces over the surviving clients only, letting
+    the quarantined scan pipeline one round deep like the honest path.
     """
     tx = make_galore_tx(cfg, spec)
     gcfg = make_galore_cfg(spec)
@@ -468,14 +497,35 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
 
         return _stream(local_fn, opt_states, batches)
 
-    def round_step(global_trainable, frozen, opt_states, batches, weights):
+    def round_step(global_trainable, frozen, opt_states, batches, weights,
+                   attack=None):
         w = weights / jnp.sum(weights)
         axes = gal.client_opt_axes(opt_states)
         use_factored = (factored_ok and gal.all_blocks_projected(
             gal.galore_state_of(opt_states)))
+        if attack is not None and not use_factored:
+            raise ValueError("the attack operand requires the factored "
+                             "client round")
         if use_factored:
             out_d, out_st, losses, base_scales = _local_phase_factored(
                 global_trainable, frozen, opt_states, batches, axes)
+            if attack is not None:
+                # Adversary injection (engine parity): multiply each
+                # client's uplink — factored accumulators AND projected
+                # moments — by its attack entry, before the screen.
+                tmap = jax.tree_util.tree_map
+                ab = lambda x: attack.astype(jnp.float32).reshape(
+                    (-1,) + (1,) * (x.ndim - 1))
+                out_d = tmap(lambda x: (x.astype(jnp.float32)
+                                        * ab(x)).astype(x.dtype), out_d)
+                g_st = gal.galore_state_of(out_st)
+                v_atk = tmap(
+                    lambda x: None if x is None
+                    else (x.astype(jnp.float32) * ab(x)).astype(x.dtype),
+                    gal.extract_projected_v(g_st),
+                    is_leaf=lambda x: x is None)
+                out_st = gal.replace_galore_state(
+                    out_st, gal.with_projected_v(g_st, v_atk))
             if guard and quarantine:
                 # In-round quarantine: screen the factored uplink, fold
                 # failures into the zero-weight mask path (sanitized
@@ -503,7 +553,7 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
                         else proj.LEFT)
                 lifted = agg_lib.robust_factored_lift(
                     d_stack, b_stack, side, w, robust_agg, hetero=hetero,
-                    trim=robust_trim, iters=robust_iters)
+                    trim=robust_trim, iters=robust_iters, tol=robust_tol)
                 return (sbar * x.astype(jnp.float32)
                         + lifted).astype(x.dtype)
 
@@ -531,11 +581,17 @@ def make_fed_round_step(cfg: ArchConfig, spec: TrainSpec, n_clients: int,
                 out_st, w, n_clients, state_sync, factored=factored_sync,
                 bases_shared=(spec.refresh_mode != "svd"),
                 exclude_zero_weights=exclude_zero_weights or quarantine,
-                bucketed=bucketed_sync)
+                bucketed=bucketed_sync, robust_agg=robust_agg,
+                robust_trim=robust_trim, robust_iters=robust_iters,
+                robust_tol=robust_tol)
+            if return_weights:
+                return new_global, out_st, losses, None, w
             return new_global, out_st, losses, None
         # 𝒮 payload for the host-side filter: projected second moments ṽ
         # (client-stacked, O(n·r))
         v_upload = gal.extract_projected_v(gal.galore_state_of(out_st))
+        if return_weights:
+            return new_global, out_st, losses, v_upload, w
         return new_global, out_st, losses, v_upload
 
     return round_step

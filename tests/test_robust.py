@@ -469,3 +469,244 @@ def test_sharded_runtime_rejects_robust_dense_clients():
     with pytest.raises(ValueError, match="factored"):
         fed.run_round({"tokens": np.zeros((3, 2, 2, 8), np.int32),
                        "labels": np.zeros((3, 2, 2, 8), np.int32)})
+
+
+# ---------------------------------------- basis-coherent hetero robustness --
+
+def _orthonormal(m, r, seed):
+    q, _ = np.linalg.qr(np.random.default_rng(seed).normal(size=(m, r)))
+    return np.asarray(q, np.float32)
+
+
+def test_rebase_shared_basis_is_identity():
+    """All clients on one orthonormal basis: the transfer Grams are exact
+    identities and re-basing returns the stack unchanged (up to fp32)."""
+    rng = np.random.default_rng(1)
+    b = _orthonormal(6, 3, 0)
+    bases = jnp.asarray(np.broadcast_to(b, (4,) + b.shape))
+    right = jnp.asarray(rng.normal(size=(4, 5, 3)), jnp.float32)
+    out = agg.rebase_factored_stack(right, bases, "right")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(right), atol=1e-5)
+    left = jnp.asarray(rng.normal(size=(4, 3, 5)), jnp.float32)
+    out = agg.rebase_factored_stack(left, bases, "left")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(left), atol=1e-5)
+
+
+def test_rebase_aligns_rotated_bases():
+    """Clients observing the SAME ambient update through rotated bases
+    (Bᵢ = B₀Qᵢ spans the same subspace) disagree coordinate-wise; after
+    re-basing onto client 0's basis every honest row coincides with R₀ —
+    the property that makes coordinate-wise votes basis-coherent."""
+    rng = np.random.default_rng(3)
+    m, n, r, c = 7, 5, 3, 4
+    b0 = _orthonormal(n, r, 0)
+    ambient = rng.normal(size=(m, n)).astype(np.float32)
+    bases, coords = [], []
+    for i in range(c):
+        q, _ = np.linalg.qr(rng.normal(size=(r, r)))
+        bi = b0 @ q.astype(np.float32)
+        bases.append(bi)
+        coords.append(ambient @ bi)                      # side 'right'
+    stack = jnp.asarray(np.stack(coords))
+    out = np.asarray(agg.rebase_factored_stack(
+        stack, jnp.asarray(np.stack(bases)), "right"))
+    ref = ambient @ bases[0]       # everything lands on client 0's basis
+    for i in range(c):
+        np.testing.assert_allclose(out[i], ref, atol=1e-4)
+
+
+def test_robust_hetero_lift_basis_coherent_outlier():
+    """Rotated honest bases + one 100x attacker: the coordinate-wise robust
+    modes re-base first and recover the honest ambient update, while the
+    plain hetero mean is dragged."""
+    rng = np.random.default_rng(4)
+    m, n, r, c = 7, 5, 3, 5
+    b0 = _orthonormal(n, r, 0)
+    ambient = rng.normal(size=(m, n)).astype(np.float32)
+    honest_lift = (ambient @ b0) @ b0.T                  # P-projected update
+    bases, coords = [], []
+    for i in range(c):
+        q, _ = np.linalg.qr(rng.normal(size=(r, r)))
+        bi = b0 @ q.astype(np.float32)
+        bases.append(bi)
+        coords.append(ambient @ bi * (100.0 if i == c - 1 else 1.0))
+    stack = jnp.asarray(np.stack(coords))
+    bstack = jnp.asarray(np.stack(bases))
+    w = jnp.full((c,), 1.0 / c)
+    for mode in ("trimmed_mean", "geomedian"):
+        out = np.asarray(agg.robust_factored_lift(
+            stack, bstack, "right", w, mode, hetero=True, trim=0.25))
+        err = np.abs(out - honest_lift).max()
+        assert err < 0.05 * np.abs(honest_lift).max(), (mode, err)
+    dragged = np.asarray(agg.robust_factored_lift(
+        stack, bstack, "right", w, "none", hetero=True))
+    assert np.abs(dragged - honest_lift).max() > np.abs(honest_lift).max()
+
+
+def test_robust_hetero_lift_matches_shared_on_shared_bases():
+    """hetero=True with identical bases must agree with the shared-basis
+    robust lift: re-basing through identity Grams is a no-op."""
+    rng = np.random.default_rng(5)
+    b = _orthonormal(6, 3, 1)
+    bases = jnp.asarray(np.broadcast_to(b, (4,) + b.shape))
+    stack = jnp.asarray(rng.normal(size=(4, 5, 3)), jnp.float32)
+    w = jnp.asarray([0.4, 0.3, 0.2, 0.1])
+    for mode in ("trimmed_mean", "geomedian", "norm_clip"):
+        het = np.asarray(agg.robust_factored_lift(
+            stack, bases, "right", w, mode, hetero=True))
+        shared = np.asarray(agg.robust_factored_lift(
+            stack, bases, "right", w, mode, hetero=False))
+        np.testing.assert_allclose(het, shared, atol=1e-5, err_msg=mode)
+
+
+# ----------------------------------------------------------- robust 𝒮 ------
+
+def test_robust_sync_bounds_moment_drag():
+    """A 100x scale attack poisons the projected-moment stacks feeding 𝒮;
+    with robust_agg='trimmed_mean' the synced moments stay near the honest
+    trajectory instead of being dragged with the plain weighted mean."""
+    honest = _engine()
+    plain = _engine()
+    robust = _engine(robust_agg="trimmed_mean", robust_trim=0.3)
+    attack = np.ones(4, np.float32)
+    attack[2] = 100.0
+    for r in range(2):
+        b = _round_batches(r)
+        honest.run_round(b)
+        plain.run_round(b, attack=attack)
+        robust.run_round(b, attack=attack)
+    err_plain = pop.tree_rel_err(plain.synced_v, honest.synced_v)
+    err_robust = pop.tree_rel_err(robust.synced_v, honest.synced_v)
+    assert err_robust < 0.5 * err_plain, (err_robust, err_plain)
+    _finite_tree(robust.synced_v)
+
+
+def test_robust_round0_hetero_bounds_scale_attack():
+    """Round 0 runs per-client SVD bases (the adaptive refresh): the robust
+    modes must already bound the attack there via transfer-Gram re-basing
+    — the round where the old fallback degraded to median-norm clips."""
+    honest, plain = _engine(), _engine()
+    robust = _engine(robust_agg="geomedian")
+    attack = np.ones(4, np.float32)
+    attack[1] = 100.0
+    b = _round_batches(0)
+    honest.run_round(b)
+    plain.run_round(b, attack=attack)
+    robust.run_round(b, attack=attack)
+    err_plain = pop.tree_rel_err(plain.global_trainable,
+                                 honest.global_trainable)
+    err_robust = pop.tree_rel_err(robust.global_trainable,
+                                  honest.global_trainable)
+    assert err_robust < 0.1 * err_plain, (err_robust, err_plain)
+    _finite_tree(robust.global_trainable)
+    _finite_tree(robust.synced_v)
+
+
+# -------------------------------------------------- seeded attack schedule --
+
+def test_corruption_schedule_matches_per_round_multipliers():
+    """corruption_schedule is exactly the per-round corruption_multipliers
+    sequence (the shared operand source for engine/runtime parity grids),
+    and start_round windows align with the full schedule."""
+    pcfg = pop.ParticipationConfig(corrupt_rate=0.5, corrupt_modes=("scale",),
+                                   attack_scale=37.0, seed=3)
+    sched = pop.corruption_schedule(pcfg, 4, 6)
+    assert len(sched) == 6
+    for k, m in enumerate(sched):
+        ref = pop.corruption_multipliers(pop.sample_cohort(pcfg, 4, k), pcfg)
+        if ref is None:
+            assert m is None
+        else:
+            np.testing.assert_array_equal(m, ref)
+    assert any(m is not None for m in sched)
+    tail = pop.corruption_schedule(pcfg, 4, 3, start_round=3)
+    for a, b in zip(sched[3:], tail):
+        if a is None:
+            assert b is None
+        else:
+            np.testing.assert_array_equal(a, b)
+
+
+# ----------------------------------------------- runtime attack parity ------
+
+def test_sharded_runtime_all_ones_attack_short_circuits():
+    """run_round(attack=ones) must canonicalize onto the plain program:
+    bit-identical outputs and no guarded compile."""
+    from repro.fedsim import ShardedFederation
+
+    c = 3
+    cfg, mesh, spec, batches = _runtime_setup(c)
+    fed_a = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive")
+    fed_p = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive")
+    for r in range(2):
+        b = batches(r)
+        ma = fed_a.run_round(b, attack=np.ones(c, np.float32))
+        mp = fed_p.run_round(b)
+        assert jnp.array_equal(ma["losses"], mp["losses"])
+    _leaves_equal(fed_a.global_trainable, fed_p.global_trainable)
+    assert fed_a._round_masked is None      # guarded program never built
+
+
+@pytest.mark.parametrize("attack_val", [np.nan, 1e4], ids=["nan", "scale"])
+def test_sharded_runtime_quarantine_matches_masked_round(attack_val):
+    """Runtime attack parity with the engine's contract: a quarantined
+    attacker ~ the same client masked out of the round."""
+    from repro.fedsim import ShardedFederation
+
+    c = 3
+    cfg, mesh, spec, batches = _runtime_setup(c)
+    kw = dict(state_sync="ajive", quarantine=True, quarantine_zmax=50.0)
+    fed_a = ShardedFederation(cfg, spec, mesh, c, **kw)
+    fed_m = ShardedFederation(cfg, spec, mesh, c, **kw)
+    attack = np.ones(c, np.float32)
+    attack[1] = attack_val
+    mask = np.ones(c, bool)
+    mask[1] = False
+    for r in range(2):
+        b = batches(r)
+        fed_a.run_round(b, attack=attack)
+        fed_m.run_round(b, mask=mask)
+    _finite_tree(fed_a.global_trainable)
+    for la, lb in zip(jax.tree_util.tree_leaves(fed_a.global_trainable),
+                      jax.tree_util.tree_leaves(fed_m.global_trainable)):
+        assert jnp.allclose(la, lb, atol=1e-5), float(
+            jnp.max(jnp.abs(la - lb)))
+
+
+def test_sharded_runtime_attack_requires_fused_round():
+    from repro.fedsim import ShardedFederation
+
+    c = 3
+    cfg, mesh, spec, batches = _runtime_setup(c)
+    fed = ShardedFederation(cfg, spec, mesh, c, fused_round=False)
+    attack = np.ones(c, np.float32)
+    attack[0] = -1.0            # all-ones would canonicalize away
+    with pytest.raises(ValueError, match="fused_round"):
+        fed.run_round(batches(0), attack=attack)
+
+
+def test_sharded_runtime_robust_sync_bounds_scale_attack():
+    """Runtime robust-𝒮 parity with the engine: under a scale attack the
+    trimmed-mean federation tracks the honest trajectory closer than the
+    undefended one, and stays finite."""
+    from repro.fedsim import ShardedFederation
+
+    c = 3
+    cfg, mesh, spec, batches = _runtime_setup(c)
+    honest = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive")
+    plain = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive")
+    robust = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive",
+                               robust_agg="trimmed_mean", robust_trim=0.34)
+    attack = np.ones(c, np.float32)
+    attack[2] = 100.0
+    for r in range(2):
+        b = batches(r)
+        honest.run_round(b)
+        plain.run_round(b, attack=attack)
+        robust.run_round(b, attack=attack)
+    err_plain = pop.tree_rel_err(plain.global_trainable,
+                                 honest.global_trainable)
+    err_robust = pop.tree_rel_err(robust.global_trainable,
+                                  honest.global_trainable)
+    assert err_robust < err_plain, (err_robust, err_plain)
+    _finite_tree(robust.global_trainable)

@@ -343,18 +343,34 @@ def test_runtime_pipelined_rounds_match_sequential():
             _trees_close(a, b, atol=1e-6)
 
 
-def test_runtime_quarantine_forces_sequential():
-    """Quarantine rewrites effective weights inside the round program, which
-    the deferred 𝒮 cannot observe — the pipelined gate must refuse."""
+def test_runtime_quarantine_pipelines_and_matches_sequential():
+    """Quarantine used to force the sequential scan (the screen rewrites
+    effective weights inside the round, invisible to the deferred 𝒮). The
+    raw round core now returns its post-screen weights (return_weights) and
+    they ride the scan carry — so the quarantined scan pipelines AND
+    matches the sequential oracle, unmasked and masked."""
     from repro.fedsim import ShardedFederation
 
-    c = 3
+    c, k_rounds = 3, 4
     cfg, mesh, spec, batches = _runtime_setup(c)
     fed = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive",
                             quarantine=True, pipeline_sync=True)
-    assert not fed._pipeline_rounds()
+    assert fed._pipeline_rounds()
     fed_off = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive",
                                 pipeline_sync=False)
     assert not fed_off._pipeline_rounds()
-    fed_on = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive")
-    assert fed_on._pipeline_rounds()
+
+    bat = batches(9, k_rounds=k_rounds)
+    masks = np.ones((k_rounds, c), bool)
+    masks[1, 0] = False
+    masks[3, 2] = False
+    for mk in (None, masks):
+        outs = {}
+        for pipe in (True, False):
+            fed = ShardedFederation(cfg, spec, mesh, c, state_sync="ajive",
+                                    quarantine=True, quarantine_zmax=50.0,
+                                    pipeline_sync=pipe)
+            m = fed.run_rounds(bat, masks=mk)
+            outs[pipe] = (fed.global_trainable, fed.opt_states, m["losses"])
+        for a, b in zip(outs[True], outs[False]):
+            _trees_close(a, b, atol=1e-6)
