@@ -12,6 +12,7 @@ One benchmark per paper artifact:
   Table 2       -> bench_comm
   §Roofline     -> roofline (reads dryrun_single.json when present)
   Round fusion  -> bench_round_e2e (eager vs fused vs scan-over-rounds)
+  Serving       -> bench_serve (scan decode, hetero adapters, slot batching)
 """
 from __future__ import annotations
 
@@ -47,13 +48,14 @@ def main() -> None:
     from . import (bench_ajive_latency, bench_ajive_recovery, bench_comm,
                    bench_fed_methods, bench_galore_fused, bench_interpolation,
                    bench_landscape, bench_participation,
-                   bench_projector_schedule, bench_round_e2e,
+                   bench_projector_schedule, bench_round_e2e, bench_serve,
                    bench_state_mismatch)
 
     print("name,us_per_call,derived")
     suites = [
         ("galore_fused", bench_galore_fused.main),
         ("round_e2e", bench_round_e2e.main),
+        ("serve", bench_serve.main),
         ("ajive_latency", bench_ajive_latency.main),
         ("ajive_recovery", bench_ajive_recovery.main),
         ("comm", bench_comm.main),

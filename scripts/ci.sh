@@ -31,6 +31,18 @@
 #                                      # installed), then gates the 𝒮-stage
 #                                      # budget and pipelined ≥ sequential
 #                                      # keys on BENCH_round_e2e.json
+#        scripts/ci.sh --serve-smoke   # multi-tenant serving leg: runs the
+#                                      # serving suite (batched hetero-adapter
+#                                      # kernel, scan≡eager decode parity,
+#                                      # SlotServer continuous batching; with
+#                                      # a coverage floor on launch/serve +
+#                                      # launch/adapters when pytest-cov is
+#                                      # installed), then runs bench_serve
+#                                      # --smoke and gates decode parity,
+#                                      # scan ≥ eager throughput, hetero-batch
+#                                      # ≥ 0.8x single-adapter tokens/s, and
+#                                      # continuous-batching parity on
+#                                      # BENCH_serve.json
 # Dev-only deps (pytest, hypothesis, pytest-cov) are listed in
 # requirements-dev.txt; tests that need hypothesis self-skip when it is
 # absent, and the --sync-smoke coverage floor downgrades to plain pytest
@@ -199,6 +211,47 @@ assert acc["quarantine_pipelined_ge_sequential"], (
     "quarantined pipelined scan slower than sequential beyond the "
     f"{acc['pipe_noise_tol']:.2f}x noise tolerance: "
     f"{json.dumps(acc['quarantine_pipeline'])}")
+EOF
+    exit 0
+fi
+
+if [[ "${1:-}" == "--serve-smoke" ]]; then
+    shift
+    # Serving suite first: batched hetero-adapter kernel vs per-request
+    # reference, scan≡eager bit-identity, adapter-store spill round-trips,
+    # SlotServer churn parity — with a line-coverage floor on the serving
+    # layer when pytest-cov is installed.
+    COV_ARGS=()
+    if PYTHONPATH=src python -c "import pytest_cov" 2>/dev/null; then
+        COV_ARGS=(--cov=repro.launch.serve --cov=repro.launch.adapters
+                  --cov-report=term --cov-fail-under=80)
+    else
+        echo "pytest-cov not installed — serving suite runs without the" \
+             "coverage floor"
+    fi
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q \
+        ${COV_ARGS[@]+"${COV_ARGS[@]}"} \
+        tests/test_serve.py
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m \
+        benchmarks.bench_serve --smoke --out BENCH_serve.json "$@"
+    python - <<'EOF'
+import json
+acc = json.load(open("BENCH_serve.json"))["acceptance"]
+print("serve acceptance:", json.dumps(acc, indent=1))
+# Serving gates: the fused scan decode must emit the exact greedy tokens of
+# the eager loop and be no slower, a heterogeneous-adapter batch (every row
+# its own factor pair over one shared base GEMM) must hold >= 0.8x the
+# single-adapter throughput, and continuous batching must reproduce straight
+# generation per request through retire/admit churn.
+assert acc["decode_parity"], "scan decode != eager greedy tokens"
+assert acc["scan_speedup_b4_n64"] >= 1.0, (
+    f"fused scan decode slower than eager loop: "
+    f"x{acc['scan_speedup_b4_n64']:.2f}")
+assert acc["hetero_tput_ratio_g16_b8"] >= 0.8, (
+    f"hetero-adapter batch below 0.8x single-adapter throughput at "
+    f"G={acc['hetero_gate_adapters']}: x{acc['hetero_tput_ratio_g16_b8']:.2f}")
+assert acc["continuous_parity"], (
+    "SlotServer continuous batching != straight generate per request")
 EOF
     exit 0
 fi

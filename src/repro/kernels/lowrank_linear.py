@@ -23,6 +23,16 @@ The kernel is the *forward* of the lift-free delta read; its backward (the
 projected-cotangent VJP — grad wrt R̃ arrives already in rank-r coordinates)
 lives in ``models.layers.lowrank_apply``, which consumes this kernel via
 ``ops.lowrank_linear`` on TPU.
+
+``lowrank_linear_batched`` is the *serving* variant of the same apply: one
+decode batch where every row carries its own adapter — the S-LoRA/Punica
+shape. The base GEMM is shared across the batch; each grid program gathers
+its row's ``(basis_g, R̃_g, scale_g)`` blocks by the scalar-prefetched
+``(B,)`` adapter-id operand (the id indexes the BlockSpec ``index_map``, so
+only the selected adapter's factors are ever DMA'd — the ``(G, ·, r)``
+tables stay put no matter how many fine-tunes are resident). Ragged
+per-adapter ranks are handled upstream by zero-padding factors to the
+table's r_max: zero basis/R̃ columns contribute exactly zero delta.
 """
 from __future__ import annotations
 
@@ -31,6 +41,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 RIGHT = "right"
 LEFT = "left"
@@ -100,3 +111,72 @@ def lowrank_linear(x, w, basis, rt, scale, *, side=None, block_rows=128,
         interpret=interpret,
     )(jnp.full((1, 1), scale, jnp.float32), x2, w, basis, rt)
     return y.reshape(lead + (nn,))
+
+
+# ------------------------------------------- batched heterogeneous adapters --
+
+def _batched_kernel(ids_ref, x_ref, w_ref, basis_ref, rt_ref, scale_ref,
+                    y_out, *, side):
+    """One grid program = one sequence's row tile. The adapter-dependent
+    operands (basis/rt/scale) arrive already gathered: their BlockSpec
+    index_maps consumed the scalar-prefetched ids, so block 0 here IS
+    adapter ``ids[b]``'s block."""
+    del ids_ref
+    x = x_ref[0].astype(jnp.float32)              # (bt, m)
+    w = w_ref[...].astype(jnp.float32)
+    base = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    basis = basis_ref[0].astype(jnp.float32)
+    rt = rt_ref[0].astype(jnp.float32)
+    if side == RIGHT:
+        delta = jnp.dot(jnp.dot(x, rt, preferred_element_type=jnp.float32),
+                        basis.T, preferred_element_type=jnp.float32)
+    else:
+        delta = jnp.dot(jnp.dot(x, basis, preferred_element_type=jnp.float32),
+                        rt, preferred_element_type=jnp.float32)
+    y_out[0] = (scale_ref[0] * base + delta).astype(y_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("side", "block_t", "interpret"))
+def lowrank_linear_batched(x, w, bases, rts, scales, ids, *, side=None,
+                           block_t=128, interpret=False):
+    """Per-row heterogeneous-adapter apply for one shared base block.
+
+    x (B, t, m) or (B, m); w (m, n) shared base; bases (G, n, r) right /
+    (G, m, r) left; rts (G, m, r) right / (G, r, n) left; scales (G,)
+    per-adapter base multipliers; ids (B,) int32 adapter index per row.
+    Returns ``y[b] = scales[ids[b]]·(x[b] @ w) + split-matmul(x[b],
+    bases[ids[b]], rts[ids[b]])`` — one compiled program regardless of G,
+    duplicate ids welcome. The token dim tiles by ``block_t`` (ceil-div
+    grid, trailing partial tile masked by Pallas block clipping).
+    """
+    squeeze_t = x.ndim == 2
+    if squeeze_t:
+        x = x[:, None, :]
+    b, t, mm = x.shape
+    nn = w.shape[-1]
+    side = side or infer_side(w.shape, bases.shape[1:], rts.shape[1:])
+    r = bases.shape[-1]
+    bshape = (1, nn, r) if side == RIGHT else (1, mm, r)
+    rshape = (1, mm, r) if side == RIGHT else (1, r, nn)
+    bt = min(block_t, t)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, pl.cdiv(t, bt)),
+        in_specs=[
+            pl.BlockSpec((1, bt, mm), lambda i, j, ids: (i, j, 0)),
+            pl.BlockSpec((mm, nn), lambda i, j, ids: (0, 0)),
+            pl.BlockSpec(bshape, lambda i, j, ids: (ids[i], 0, 0)),
+            pl.BlockSpec(rshape, lambda i, j, ids: (ids[i], 0, 0)),
+            pl.BlockSpec((1,), lambda i, j, ids: (ids[i],)),
+        ],
+        out_specs=pl.BlockSpec((1, bt, nn), lambda i, j, ids: (i, j, 0)),
+    )
+    out_dtype = jnp.result_type(x.dtype, w.dtype)
+    y = pl.pallas_call(
+        functools.partial(_batched_kernel, side=side),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, t, nn), out_dtype),
+        interpret=interpret,
+    )(jnp.asarray(ids, jnp.int32), x, w, bases,
+      rts, jnp.asarray(scales, jnp.float32))
+    return y[:, 0, :] if squeeze_t else y

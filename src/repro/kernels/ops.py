@@ -16,6 +16,7 @@ from .flash_attention import flash_attention as _flash
 from .galore_adamw import galore_adamw_step as _galore
 from .galore_adamw import galore_precond_step as _galore_precond
 from .lowrank_linear import lowrank_linear as _lowrank
+from .lowrank_linear import lowrank_linear_batched as _lowrank_batched
 from .rwkv6_scan import rwkv6_scan as _rwkv6
 
 
@@ -42,6 +43,11 @@ def galore_precond_step(g, basis, m, v, count, **kw):
 def lowrank_linear(x, w, basis, rt, scale, **kw):
     kw.setdefault("interpret", _interpret())
     return _lowrank(x, w, basis, rt, scale, **kw)
+
+
+def lowrank_linear_batched(x, w, bases, rts, scales, ids, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _lowrank_batched(x, w, bases, rts, scales, ids, **kw)
 
 
 def rwkv6_scan(r, k, v, w, u, s0=None, *, chunk=128):

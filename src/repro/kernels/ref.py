@@ -52,6 +52,32 @@ def lowrank_linear_ref(x, w, basis, rt, scale, *, side):
     return (base + delta).astype(jnp.result_type(x.dtype, w.dtype))
 
 
+def lowrank_linear_batched_ref(x, w, bases, rts, scales, ids, *, side):
+    """Per-row heterogeneous-adapter apply (the serving batch shape).
+
+    x (B, t, m) or (B, m); w (m, n) shared base; bases/rts/scales are
+    (G, ·, ·)/(G,) adapter tables; ids (B,) selects each row's adapter:
+    ``y[b] = scales[ids[b]]·(x[b]@w) + split-matmul(x[b], bases[ids[b]],
+    rts[ids[b]])``. Plain gather + einsum with fp32 accumulation — the
+    allclose target for the scalar-prefetch Pallas kernel.
+    """
+    squeeze_t = x.ndim == 2
+    x3 = (x[:, None, :] if squeeze_t else x).astype(jnp.float32)
+    ids = jnp.asarray(ids, jnp.int32)
+    s = jnp.asarray(scales, jnp.float32)[ids][:, None, None]
+    base = s * (x3 @ w.astype(jnp.float32))
+    bg = bases.astype(jnp.float32)[ids]
+    rg = rts.astype(jnp.float32)[ids]
+    if side == "right":
+        delta = jnp.einsum("btr,bnr->btn", jnp.einsum("btm,bmr->btr", x3, rg),
+                           bg)
+    else:
+        delta = jnp.einsum("btr,brn->btn", jnp.einsum("btm,bmr->btr", x3, bg),
+                           rg)
+    y = (base + delta).astype(jnp.result_type(x.dtype, w.dtype))
+    return y[:, 0, :] if squeeze_t else y
+
+
 def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
     """q (B, Lq, H, D), k/v (B, Lk, Hkv, D), GQA by head grouping."""
     b, lq, h, d = q.shape

@@ -173,9 +173,21 @@ def kv_cache_init(batch: int, size: int, n_kv: int, head_dim: int,
 
 
 def kv_cache_write(cache: KVCache, k_new, v_new, t0) -> KVCache:
-    """Ring-buffer write of (B, Ln, Hkv, hd) starting at absolute pos t0."""
+    """Ring-buffer write of (B, Ln, Hkv, hd) starting at absolute pos t0.
+
+    ``t0`` scalar: every row writes the same slots (the homogeneous decode
+    batch — unchanged fast path). ``t0`` (B,): per-row start positions, the
+    continuous-batching layout where each slot sits at its own depth."""
     b, ln = k_new.shape[:2]
     size = cache.k.shape[1]
+    if jnp.ndim(t0):
+        pos = t0[:, None] + jnp.arange(ln)[None, :]          # (B, Ln)
+        slots = pos % size
+        rows = jnp.arange(b)[:, None]
+        k = cache.k.at[rows, slots].set(k_new.astype(cache.k.dtype))
+        v = cache.v.at[rows, slots].set(v_new.astype(cache.v.dtype))
+        p = cache.pos.at[rows, slots].set(pos.astype(jnp.int32))
+        return KVCache(k=k, v=v, pos=p)
     pos = t0 + jnp.arange(ln)
     slots = pos % size
     k = cache.k.at[:, slots].set(k_new.astype(cache.k.dtype))
@@ -186,7 +198,8 @@ def kv_cache_write(cache: KVCache, k_new, v_new, t0) -> KVCache:
 
 def gqa_decode(p, x, cache: KVCache, t, *, n_heads, n_kv, head_dim,
                rope=True, rope_theta=1e4, window=0):
-    """One-token decode. x (B,1,D); t scalar absolute position."""
+    """One-token decode. x (B,1,D); t scalar absolute position, or (B,)
+    per-row positions (continuous-batching slots at different depths)."""
     b = x.shape[0]
     q = x @ p["wq"] + p.get("bq", 0)
     k = x @ p["wk"] + p.get("bk", 0)
@@ -194,7 +207,8 @@ def gqa_decode(p, x, cache: KVCache, t, *, n_heads, n_kv, head_dim,
     q = _split_heads(q, n_heads, head_dim)
     k = _split_heads(k, n_kv, head_dim)
     v = _split_heads(v, n_kv, head_dim)
-    pos1 = jnp.full((1,), t, jnp.int32)
+    pos1 = (t[:, None].astype(jnp.int32) if jnp.ndim(t)
+            else jnp.full((1,), t, jnp.int32))
     if rope:
         q = apply_rope(q, pos1, rope_theta)
         k = apply_rope(k, pos1, rope_theta)
@@ -341,6 +355,14 @@ def mla_cache_init(batch: int, size: int, kv_lora: int, rope_dim: int,
 def mla_cache_write(cache: MLACache, c_kv, k_pe, t0) -> MLACache:
     b, ln = c_kv.shape[:2]
     size = cache.ckv.shape[1]
+    if jnp.ndim(t0):
+        pos = t0[:, None] + jnp.arange(ln)[None, :]          # (B, Ln)
+        slots = pos % size
+        rows = jnp.arange(b)[:, None]
+        return MLACache(
+            ckv=cache.ckv.at[rows, slots].set(c_kv.astype(cache.ckv.dtype)),
+            kpe=cache.kpe.at[rows, slots].set(k_pe.astype(cache.kpe.dtype)),
+            pos=cache.pos.at[rows, slots].set(pos.astype(jnp.int32)))
     pos = t0 + jnp.arange(ln)
     slots = pos % size
     return MLACache(
@@ -354,9 +376,11 @@ def mla_decode(p, x, cache: MLACache, t, *, n_heads, qk_nope, qk_rope,
                kv_lora, v_dim, rope_theta=1e4, window=0):
     """Absorbed-form single-token MLA decode: attention runs entirely in the
     compressed space — per-step FLOPs O(H·S·(kv_lora + rope)) and the cache
-    stores only (kv_lora + rope) per position."""
+    stores only (kv_lora + rope) per position. ``t`` scalar, or (B,)
+    per-row positions for continuous-batching slots."""
     b = x.shape[0]
-    pos1 = jnp.full((1,), t, jnp.int32)
+    pos1 = (t[:, None].astype(jnp.int32) if jnp.ndim(t)
+            else jnp.full((1,), t, jnp.int32))
     q_nope, q_pe, c_kv_new, k_pe_new = _mla_qkv(
         p, x, pos1, n_heads, qk_nope, qk_rope, kv_lora, rope_theta)
     cache = mla_cache_write(cache, c_kv_new, k_pe_new, t)

@@ -4,6 +4,7 @@ that lets a factored federated client run its forward/backward without ever
 materializing ``base_scale·W + lift(R̃)`` or a dense ``m×n`` gradient."""
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import NamedTuple, Optional
 
@@ -255,18 +256,110 @@ def _lowrank_bwd(side, use_pallas, res, dy):
 lowrank_apply.defvjp(_lowrank_fwd, _lowrank_bwd)
 
 
+# ------------------------------------------- multi-adapter serving context --
+#
+# The serving counterpart of LowRankDelta: one shared base weight plus a
+# TABLE of G adapters' factors, where each row of the batch selects its own
+# adapter by the (B,) ids operand installed via `adapter_ids(...)`. The
+# forward is the same split-matmul apply as the training leaf — per row:
+#
+#   y[b] = scales[g]·(x[b] @ W) + split-matmul(x[b], bases[g], rts[g]),
+#   g = ids[b]
+#
+# routed through the scalar-prefetch Pallas kernel on TPU (only the selected
+# adapters' blocks are DMA'd from the (G, ·, r) tables) and a gather+einsum
+# reference elsewhere. Forward-only by design: serving never differentiates
+# the leaf. Ragged per-adapter ranks arrive zero-padded to the table's
+# r_max (zero columns contribute exactly zero delta).
+
+_ADAPTER_IDS = [None]   # (B,) int32 adapter index per batch row
+
+
+@contextlib.contextmanager
+def adapter_ids(ids):
+    """Install the per-row adapter-id operand consumed by ``dense`` when it
+    meets a :class:`MultiAdapterDelta` leaf. The ids array is traced state:
+    enter inside the same jit/scan trace that runs the forward."""
+    _ADAPTER_IDS.append(None if ids is None else jnp.asarray(ids, jnp.int32))
+    try:
+        yield
+    finally:
+        _ADAPTER_IDS.pop()
+
+
+class MultiAdapterDelta(NamedTuple):
+    """A served target leaf: broadcast base weight plus a G-adapter factor
+    table. All fields are pytree children with a common leading stack axis
+    where the ambient params are stacked — (nb, m, n) bases pair with
+    (nb, G, dim, r) tables, so the node slices cleanly under the model's
+    ``lax.scan`` over stacked layer params."""
+    w: jnp.ndarray        # (..., m, n) shared base weight
+    bases: jnp.ndarray    # (..., G, n, r) right | (..., G, m, r) left
+    rts: jnp.ndarray      # (..., G, m, r) right | (..., G, r, n) left
+    scales: jnp.ndarray   # (..., G) per-adapter base_scale
+
+    @property
+    def shape(self):
+        return self.w.shape
+
+    @property
+    def dtype(self):
+        return self.w.dtype
+
+    @property
+    def ndim(self):
+        return self.w.ndim
+
+    @property
+    def side(self) -> str:
+        m, n = self.w.shape[-2:]
+        return "right" if m >= n else "left"
+
+    def __rmatmul__(self, x):
+        """``x @ leaf`` — decode projections (``x @ p["wq"]``) route here."""
+        return dense(x, self)
+
+
+def multi_adapter_apply(leaf: MultiAdapterDelta, x, ids):
+    """Batched heterogeneous-adapter apply for one leaf. x (B, t, m) or
+    (B, m); ids (B,). The leaf must be sliced to its per-layer view (2-D
+    base) by the ambient scan before application."""
+    if leaf.w.ndim != 2:
+        raise ValueError(
+            "multi-adapter leaf applied with a stacked base "
+            f"{leaf.w.shape} — expected the scan-sliced per-layer view")
+    if x.shape[0] != ids.shape[0]:
+        raise ValueError(
+            f"adapter ids cover {ids.shape[0]} rows but the batch has "
+            f"{x.shape[0]} — one id per decode row is required")
+    if _use_lowrank_pallas():
+        return kops.lowrank_linear_batched(x, leaf.w, leaf.bases, leaf.rts,
+                                           leaf.scales, ids, side=leaf.side)
+    from ..kernels.ref import lowrank_linear_batched_ref
+    return lowrank_linear_batched_ref(x, leaf.w, leaf.bases, leaf.rts,
+                                      leaf.scales, ids, side=leaf.side)
+
+
 def dense(x, w):
     """Delta-aware linear apply: ``x @ w`` for plain weights; the lift-free
     split-matmul read (projected-cotangent backward) when ``w`` is a
-    :class:`LowRankDelta` leaf. Model projections route through this so
-    ``loss_fn(params, batch)`` signatures never change."""
+    :class:`LowRankDelta` leaf; the per-row heterogeneous-adapter apply when
+    ``w`` is a :class:`MultiAdapterDelta` serving leaf (batch ids from the
+    ambient :func:`adapter_ids` context). Model projections route through
+    this so ``loss_fn(params, batch)`` signatures never change."""
     if isinstance(w, LowRankDelta):
         return lowrank_apply(w.side, _use_lowrank_pallas(), x, w.w, w.basis,
                              w.rt, w.nsq, w.scale)
+    if isinstance(w, MultiAdapterDelta):
+        ids = _ADAPTER_IDS[-1]
+        if ids is None:
+            raise ValueError(
+                "MultiAdapterDelta leaf read outside an adapter_ids(...) "
+                "context — the serving driver must install the per-row "
+                "adapter ids around the forward")
+        return multi_adapter_apply(w, x, ids)
     return x @ w
 
-
-import contextlib
 
 _BATCH_AXES_OVERRIDE = [None]   # None = use (pod, data) from the mesh
 

@@ -222,7 +222,8 @@ def loss_fn(params: PyTree, cfg: ArchConfig, batch: Dict,
 # ---------------------------------------------------------------- decode ----
 
 class DecodeState(NamedTuple):
-    t: jnp.ndarray          # scalar int32 — absolute position
+    t: jnp.ndarray          # int32 absolute position: scalar (homogeneous
+                            # batch) or (B,) per-slot (continuous batching)
     layers: PyTree          # list (period) of stacked per-block states
 
 
@@ -239,9 +240,12 @@ def _layer_state_init(cfg: ArchConfig, mix: str, batch: int, cache_len: int):
     return rwkv_lib.rwkv_state_init(batch, cfg.d_model)
 
 
-def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> DecodeState:
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int,
+                      per_slot: bool = False) -> DecodeState:
     """cache_len: KV slots. For sliding-window archs pass the window size —
-    the ring buffer keeps memory O(window) at any context length."""
+    the ring buffer keeps memory O(window) at any context length.
+    ``per_slot`` starts ``t`` as a (B,) vector — each batch row advances at
+    its own depth (the continuous-batching slot layout)."""
     kinds = cfg.layer_kinds()[: cfg.block_period()]
     n_blocks = cfg.n_blocks()
     layers = []
@@ -249,7 +253,8 @@ def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> DecodeStat
         one = _layer_state_init(cfg, mix, batch, cache_len)
         layers.append(jax.tree_util.tree_map(
             lambda x: jnp.broadcast_to(x[None], (n_blocks,) + x.shape), one))
-    return DecodeState(t=jnp.zeros([], jnp.int32), layers=layers)
+    t = jnp.zeros((batch,) if per_slot else [], jnp.int32)
+    return DecodeState(t=t, layers=layers)
 
 
 def _mixer_decode(lp, st, cfg: ArchConfig, mix: str, h, t):
@@ -297,8 +302,12 @@ def decode_step(params: PyTree, cfg: ArchConfig, token: jnp.ndarray,
     kinds = cfg.layer_kinds()[: cfg.block_period()]
     h = params["embed"]["w"][token][:, None, :]      # (B, 1, D)
     if cfg.pos_emb == "sinusoidal":
-        pos = state.t[None]
-        h = h + sinusoidal_positions(pos, cfg.d_model)[None].astype(h.dtype)
+        if jnp.ndim(state.t):                        # (B,) per-slot positions
+            h = h + sinusoidal_positions(state.t[:, None],
+                                         cfg.d_model).astype(h.dtype)
+        else:
+            pos = state.t[None]
+            h = h + sinusoidal_positions(pos, cfg.d_model)[None].astype(h.dtype)
 
     def block_body(h, xs):
         block_params, block_state = xs

@@ -1,0 +1,384 @@
+"""Multi-tenant serving: batched adapter kernel, scan decode, slot batching.
+
+Locks in the serving stack end to end: the scalar-prefetch batched
+heterogeneous-adapter kernel against its gather+einsum oracle, per-request
+parity of a mixed-adapter decode batch against merged-weight references,
+scan-decode bit-identity with the eager loop, per-slot decode positions,
+the AdapterStore wire format (ragged ranks, spill round-trip, cold rows =
+pristine base), and SlotServer continuous batching (retire + admit) parity
+with straight generation.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.core import projector as proj
+from repro.core.fed import merge_dense, split_trainable
+from repro.core.population import ClientStateStore
+from repro.kernels import ops, ref
+from repro.launch import adapters as adapters_lib
+from repro.launch.serve import Request, SlotServer, generate, generate_scan
+from repro.models import layers
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand_tables(key, g, m, n, r, side, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    bdim, rshape = (n, (g, m, r)) if side == "right" else (m, (g, r, n))
+    bases = jax.random.normal(ks[0], (g, bdim, r), dtype) / np.sqrt(bdim)
+    rts = 0.1 * jax.random.normal(ks[1], rshape, dtype)
+    scales = 1.0 + 0.1 * jax.random.normal(ks[2], (g,), jnp.float32)
+    return bases, rts, scales
+
+
+class TestBatchedKernel:
+    @pytest.mark.parametrize("side,m,n", [("right", 96, 64), ("left", 48, 96)])
+    @pytest.mark.parametrize("t", [1, 7, 16])   # 7: masked row tail
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, side, m, n, t, dtype):
+        b, g, r = 5, 3, 4
+        ks = jax.random.split(KEY, 2)
+        x = jax.random.normal(ks[0], (b, t, m), dtype)
+        w = jax.random.normal(ks[1], (m, n), dtype) / np.sqrt(m)
+        bases, rts, scales = _rand_tables(jax.random.fold_in(KEY, 1),
+                                          g, m, n, r, side, dtype)
+        ids = jnp.array([0, 2, 1, 2, 0], jnp.int32)
+        out_k = ops.lowrank_linear_batched(x, w, bases, rts, scales, ids,
+                                           side=side, block_t=8)
+        out_r = ref.lowrank_linear_batched_ref(x, w, bases, rts, scales,
+                                               ids, side=side)
+        tol = 1e-5 if dtype == jnp.float32 else 5e-2
+        assert out_k.shape == out_r.shape == (b, t, n)
+        assert jnp.allclose(out_k.astype(jnp.float32),
+                            out_r.astype(jnp.float32), atol=tol)
+
+    def test_2d_x_and_duplicate_ids(self):
+        b, m, n, g, r = 6, 32, 48, 2, 3
+        x = jax.random.normal(KEY, (b, m))
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), (m, n)) / 6.0
+        bases, rts, scales = _rand_tables(jax.random.fold_in(KEY, 2),
+                                          g, m, n, r, "left")
+        ids = jnp.array([1, 1, 1, 0, 0, 1], jnp.int32)   # duplicates
+        out_k = ops.lowrank_linear_batched(x, w, bases, rts, scales, ids,
+                                           side="left")
+        out_r = ref.lowrank_linear_batched_ref(x, w, bases, rts, scales,
+                                               ids, side="left")
+        assert out_k.shape == (b, n)
+        assert jnp.allclose(out_k, out_r, atol=1e-5)
+        # duplicate rows with identical inputs see identical outputs
+        same = jax.random.normal(jax.random.fold_in(KEY, 3), (m,))
+        x2 = jnp.broadcast_to(same, (b, m))
+        out2 = ops.lowrank_linear_batched(x2, w, bases, rts, scales, ids,
+                                          side="left")
+        assert jnp.allclose(out2[0], out2[1], atol=0)
+        assert jnp.allclose(out2[3], out2[4], atol=0)
+
+    @pytest.mark.parametrize("side", ["right", "left"])
+    def test_ragged_ranks_zero_padded_exact(self, side):
+        """A table padded from r_g to r_max applies the exact same delta:
+        the zero columns/rows contribute exactly zero."""
+        b, t, m, n, g = 3, 4, 40, 24, 2
+        r_small, r_max = 2, 5
+        x = jax.random.normal(KEY, (b, t, m))
+        w = jax.random.normal(jax.random.fold_in(KEY, 1), (m, n)) / 6.0
+        bases, rts, scales = _rand_tables(jax.random.fold_in(KEY, 2),
+                                          g, m, n, r_small, side)
+        pad_b = [(0, 0)] * 3
+        pad_b[2] = (0, r_max - r_small)
+        pad_r = [(0, 0)] * 3
+        pad_r[2 if side == "right" else 1] = (0, r_max - r_small)
+        bases_p = jnp.pad(bases, pad_b)
+        rts_p = jnp.pad(rts, pad_r)
+        ids = jnp.array([0, 1, 0], jnp.int32)
+        small = ops.lowrank_linear_batched(x, w, bases, rts, scales, ids,
+                                           side=side)
+        padded = ops.lowrank_linear_batched(x, w, bases_p, rts_p, scales,
+                                            ids, side=side)
+        assert jnp.array_equal(small, padded)
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = smoke_variant(get_config("qwen1.5-0.5b"))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _adapter_fixture(cfg, params, g, rank=3, ragged=False):
+    """An AdapterStore with g random tenants; returns (store, factors)."""
+    tf = adapters_lib.serving_target_fn(cfg)
+    store = adapters_lib.AdapterStore(params, tf, g, rank)
+    rng = np.random.default_rng(7)
+    factors = []
+    for i in range(g):
+        if ragged and i % 2:
+            # draw at a smaller rank; the store zero-pads on write
+            small = adapters_lib.AdapterStore(params, tf, 1, rank - 1)
+            basis, rt = small.random_factors(rng, rt_scale=0.05)
+        else:
+            basis, rt = store.random_factors(rng, rt_scale=0.05)
+        scale = 1.0 - 0.01 * i
+        store.put(i, rt, basis, scale=scale)
+        factors.append((basis, rt, scale))
+    return store, factors
+
+
+def _merged(params, cfg, basis, rt, scale):
+    tf = adapters_lib.serving_target_fn(cfg)
+    trainable, frozen = split_trainable(params, tf)
+
+    def lift(w, b, r):
+        w32 = w.astype(jnp.float32)
+        if proj.proj_side(w.shape) == proj.RIGHT:
+            d = jnp.einsum("...mr,...nr->...mn", jnp.asarray(r),
+                           jnp.asarray(b))
+        else:
+            d = jnp.einsum("...mr,...rn->...mn", jnp.asarray(b),
+                           jnp.asarray(r))
+        return (scale * w32 + d).astype(w.dtype)
+
+    return merge_dense(frozen, jax.tree_util.tree_map(lift, trainable,
+                                                      basis, rt))
+
+
+class TestHeteroAdapterServing:
+    def test_16_adapters_match_per_request_reference(self, qwen):
+        """One compiled decode batch serving 16 distinct adapters matches
+        each row's single-adapter merged-weight reference <= 1e-5."""
+        cfg, params = qwen
+        g = b = 16
+        store, factors = _adapter_fixture(cfg, params, g)
+        served = store.wrap(params)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (b, 8), 0,
+                                     cfg.vocab_size)
+        ids = jnp.arange(b, dtype=jnp.int32)
+        state = M.init_decode_state(cfg, b, 16)
+        with layers.adapter_ids(ids):
+            logits, _ = M.prefill(served, cfg, prompts, state)
+        for row in range(b):
+            mp = _merged(params, cfg, *factors[row])
+            st = M.init_decode_state(cfg, 1, 16)
+            lg, _ = M.prefill(mp, cfg, prompts[row:row + 1], st)
+            assert jnp.max(jnp.abs(logits[row] - lg[0])) <= 1e-5, row
+
+    def test_generated_tokens_match_per_request(self, qwen):
+        cfg, params = qwen
+        g = 4
+        store, factors = _adapter_fixture(cfg, params, g, ragged=True)
+        served = store.wrap(params)
+        prompts = jax.random.randint(jax.random.PRNGKey(2), (g, 8), 0,
+                                     cfg.vocab_size)
+        ids = jnp.arange(g, dtype=jnp.int32)
+        batch_out = generate_scan(served, cfg, prompts, 5, 16, adapters=ids)
+        for row in range(g):
+            mp = _merged(params, cfg, *factors[row])
+            one = generate(mp, cfg, prompts[row:row + 1], 5, 16)
+            assert jnp.array_equal(batch_out[row], one[0]), row
+
+    def test_pallas_kernel_path_in_model(self, qwen):
+        """dense() routed through the scalar-prefetch kernel (interpret)
+        matches the default einsum-reference routing."""
+        cfg, params = qwen
+        store, _ = _adapter_fixture(cfg, params, 4)
+        served = store.wrap(params)
+        prompts = jax.random.randint(jax.random.PRNGKey(3), (4, 8), 0,
+                                     cfg.vocab_size)
+        ids = jnp.array([2, 0, 3, 1], jnp.int32)
+        state = M.init_decode_state(cfg, 4, 16)
+        with layers.adapter_ids(ids):
+            ref_logits, _ = M.prefill(served, cfg, prompts, state)
+        state = M.init_decode_state(cfg, 4, 16)
+        with layers.lowrank_pallas_override(True), layers.adapter_ids(ids):
+            pal_logits, _ = M.prefill(served, cfg, prompts, state)
+        assert jnp.max(jnp.abs(ref_logits - pal_logits)) <= 1e-4
+
+    def test_errors(self, qwen):
+        cfg, params = qwen
+        store, _ = _adapter_fixture(cfg, params, 2)
+        served = store.wrap(params)
+        prompts = jax.random.randint(jax.random.PRNGKey(4), (2, 4), 0,
+                                     cfg.vocab_size)
+        state = M.init_decode_state(cfg, 2, 8)
+        with pytest.raises(ValueError, match="outside an adapter_ids"):
+            M.prefill(served, cfg, prompts, state)
+        with pytest.raises(ValueError, match="one id per decode row"):
+            with layers.adapter_ids(jnp.zeros((3,), jnp.int32)):
+                M.prefill(served, cfg, prompts, state)
+
+
+class TestScanDecode:
+    @pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "rwkv6-1.6b",
+                                      "deepseek-v2-236b"])
+    def test_scan_eager_greedy_bit_identity(self, arch):
+        cfg = smoke_variant(get_config(arch))
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
+                                     cfg.vocab_size)
+        a = generate(params, cfg, prompts, 6, cache_len=16)
+        b = generate_scan(params, cfg, prompts, 6, cache_len=16)
+        assert jnp.array_equal(a, b)
+
+    def test_scan_eager_with_adapters(self, qwen):
+        cfg, params = qwen
+        store, _ = _adapter_fixture(cfg, params, 3)
+        served = store.wrap(params)
+        prompts = jax.random.randint(jax.random.PRNGKey(5), (3, 8), 0,
+                                     cfg.vocab_size)
+        ids = jnp.array([2, 0, 1], jnp.int32)
+        a = generate(served, cfg, prompts, 5, 16, adapters=ids)
+        b = generate_scan(served, cfg, prompts, 5, 16, adapters=ids)
+        assert jnp.array_equal(a, b)
+
+    def test_per_slot_positions_match_scalar(self):
+        """decode_step with a (B,) t vector (all equal) is bit-identical
+        to the scalar-t path — rope, MLA, and sinusoidal archs."""
+        for arch in ("qwen1.5-0.5b", "deepseek-v2-236b", "musicgen-medium"):
+            cfg = smoke_variant(get_config(arch))
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+            prompts = jax.random.randint(jax.random.PRNGKey(1), (3, 6), 0,
+                                         cfg.vocab_size)
+            st = M.init_decode_state(cfg, 3, 12)
+            logits, st = M.prefill(params, cfg, prompts, st)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            lg_s, _ = M.decode_step(params, cfg, tok, st)
+            st_v = M.DecodeState(t=jnp.full((3,), st.t, jnp.int32),
+                                 layers=st.layers)
+            lg_v, _ = M.decode_step(params, cfg, tok, st_v)
+            assert jnp.array_equal(lg_s, lg_v), arch
+
+
+class TestAdapterStore:
+    def test_spill_round_trip_and_ragged_pad(self, qwen, tmp_path):
+        cfg, params = qwen
+        tf = adapters_lib.serving_target_fn(cfg)
+        store = adapters_lib.AdapterStore(params, tf, 6, 4,
+                                          directory=str(tmp_path),
+                                          shard_size=2,
+                                          max_resident_shards=1)
+        rng = np.random.default_rng(0)
+        basis, rt = store.random_factors(rng)
+        store.put(0, rt, basis, scale=0.9)
+        # ragged: rank-2 factors into the rank-4 store
+        small = adapters_lib.AdapterStore(params, tf, 1, 2)
+        basis2, rt2 = small.random_factors(rng)
+        store.put(5, rt2, basis2, scale=1.1)     # different shard -> spill
+        store.flush()
+        assert store.store.spills > 0
+        rows = store.store.gather(np.array([0, 5]))
+        b0 = jax.tree_util.tree_flatten(rows["basis"])[0][0]
+        orig = jax.tree_util.tree_flatten(basis)[0][0]
+        assert np.array_equal(b0[0], orig)
+        b5 = jax.tree_util.tree_flatten(rows["basis"])[0][0][1]
+        assert np.all(b5[..., 2:] == 0)          # zero-padded tail
+        np.testing.assert_allclose(
+            np.asarray(rows["scale_minus_1"]) + 1.0, [0.9, 1.1], rtol=1e-6)
+
+    def test_cold_adapter_is_pristine_base(self, qwen):
+        """An id that was never put decodes as the unmodified base model
+        (zeros row => scale 1, delta 0)."""
+        cfg, params = qwen
+        tf = adapters_lib.serving_target_fn(cfg)
+        store = adapters_lib.AdapterStore(params, tf, 2, 3)
+        rng = np.random.default_rng(1)
+        basis, rt = store.random_factors(rng)
+        store.put(0, rt, basis, scale=0.8)       # id 1 stays cold
+        served = store.wrap(params)
+        prompts = jax.random.randint(jax.random.PRNGKey(6), (2, 6), 0,
+                                     cfg.vocab_size)
+        state = M.init_decode_state(cfg, 2, 8)
+        with layers.adapter_ids(jnp.array([1, 1], jnp.int32)):
+            logits, _ = M.prefill(served, cfg, prompts, state)
+        state = M.init_decode_state(cfg, 2, 8)
+        base_logits, _ = M.prefill(params, cfg, prompts, state)
+        assert jnp.max(jnp.abs(logits - base_logits)) <= 1e-4
+
+    def test_from_client_state(self, qwen):
+        """A trained population's sticky delta rows serve directly."""
+        cfg, params = qwen
+        tf = adapters_lib.serving_target_fn(cfg)
+        ref_store = adapters_lib.AdapterStore(params, tf, 2, 3)
+        rng = np.random.default_rng(2)
+        basis, rt = ref_store.random_factors(rng)
+        # population-side store: rows keyed "delta" in the trainable layout
+        delta_tmpl = jax.tree_util.tree_map(
+            lambda x: np.zeros(x.shape, np.float32), rt)
+        cstore = ClientStateStore(4, {"delta": delta_tmpl})
+        cstore.scatter(np.array([2]), jax.tree_util.tree_map(
+            lambda x: np.asarray(x)[None], rt))
+        store = adapters_lib.AdapterStore.from_client_state(
+            params, tf, cstore, basis, ids=[2], base_scale=0.95)
+        assert store.n_adapters == 4
+        served = store.wrap(params, ids=np.array([2]))
+        merged = _merged(params, cfg, basis, rt, 0.95)
+        prompts = jax.random.randint(jax.random.PRNGKey(7), (1, 6), 0,
+                                     cfg.vocab_size)
+        a = generate_scan(served, cfg, prompts, 4, 12,
+                          adapters=jnp.zeros((1,), jnp.int32))
+        b = generate_scan(merged, cfg, prompts, 4, 12)
+        assert jnp.array_equal(a, b)
+
+
+class TestSlotServer:
+    @pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "rwkv6-1.6b"])
+    def test_continuous_matches_straight_generate(self, arch):
+        """Oversubscribed requests (mixed prompt lengths and budgets)
+        through retire+admit equal per-request straight generation —
+        attention (KV ring) and recurrent (RWKV state, fp32-promoted
+        carry) families."""
+        cfg = smoke_variant(get_config(arch))
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(4)
+        reqs = [Request(rid=i,
+                        prompt=rng.integers(0, cfg.vocab_size,
+                                            8 if i % 2 else 6),
+                        max_new=5 if i % 3 else 3)
+                for i in range(7)]
+        srv = SlotServer(params, cfg, slots=3, cache_len=16, segment=2)
+        out = srv.run(reqs)
+        assert out["stats"]["admitted"] == 7
+        for r in reqs:
+            ref_out = generate(params, cfg,
+                               jnp.asarray(r.prompt, jnp.int32)[None],
+                               r.max_new, 16)
+            assert out["outputs"][r.rid] == \
+                ref_out[0, -r.max_new:].tolist(), r.rid
+        # all slots freed at the end
+        assert not srv.active.any() and not srv.queue
+
+    def test_eos_retires_mid_stream(self, qwen):
+        cfg, params = qwen
+        rng = np.random.default_rng(5)
+        prompt = rng.integers(0, cfg.vocab_size, 8)
+        full = generate(params, cfg, jnp.asarray(prompt, jnp.int32)[None],
+                        8, 16)[0, -8:].tolist()
+        eos = full[3]                       # force an EOS at step 3
+        srv = SlotServer(params, cfg, slots=2, cache_len=16, segment=3,
+                         eos_id=eos)
+        out = srv.run([Request(rid=0, prompt=prompt, max_new=8)])
+        got = out["outputs"][0]
+        stop = full.index(eos)
+        assert got == full[:stop + 1]       # truncated at first EOS
+        assert not srv.active.any()
+
+    def test_adapters_in_slots(self, qwen):
+        """Each slot applies its own adapter through admit/retire churn."""
+        cfg, params = qwen
+        store, factors = _adapter_fixture(cfg, params, 3)
+        served = store.wrap(params)
+        rng = np.random.default_rng(6)
+        reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 6),
+                        max_new=4, adapter=i % 3) for i in range(5)]
+        srv = SlotServer(served, cfg, slots=2, cache_len=12, segment=2)
+        out = srv.run(reqs)
+        for r in reqs:
+            mp = _merged(params, cfg, *factors[r.adapter])
+            ref_out = generate(mp, cfg,
+                               jnp.asarray(r.prompt, jnp.int32)[None],
+                               r.max_new, 12)
+            assert out["outputs"][r.rid] == \
+                ref_out[0, -r.max_new:].tolist(), r.rid
